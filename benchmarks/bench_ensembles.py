@@ -1,0 +1,71 @@
+"""Paper Figs. 7/8/9: ensemble coupling time for fan-out, fan-in, NxN.
+
+Time to write/read the grid+particles between producer and consumer instances
+while varying the instance count (paper: up to 256 instances at 2 procs each;
+scaled here to 1-16 thread-instances and 10^4-point datasets).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import h5, Wilkins
+
+from .common import emit, synthetic_datasets
+
+N_GRID = 200_000
+
+
+def run(n_prod: int, n_cons: int) -> float:
+    yaml = f"""
+tasks:
+  - func: producer
+    taskCount: {n_prod}
+    outports:
+      - filename: o.h5
+        dsets:
+          - {{name: /g, memory: 1}}
+          - {{name: /p, memory: 1}}
+  - func: consumer
+    taskCount: {n_cons}
+    inports:
+      - filename: o.h5
+        dsets:
+          - {{name: /g, memory: 1}}
+          - {{name: /p, memory: 1}}
+"""
+    def producer():
+        with h5.File("o.h5", "w") as f:
+            g, p = synthetic_datasets(N_GRID, N_GRID, 0)
+            f.create_dataset("/g", data=g)
+            f.create_dataset("/p", data=p)
+
+    def consumer():
+        while True:
+            f = h5.File("o.h5", "r")
+            if f is None:
+                return
+            _ = f["/g"][:]
+
+    w = Wilkins(yaml, {"producer": producer, "consumer": consumer})
+    t0 = time.monotonic()
+    w.run(timeout=120)
+    return time.monotonic() - t0
+
+
+def main() -> None:
+    for n in (1, 4, 16):
+        emit(f"ensembles/fanout/1x{n}", run(1, n), "s",
+             "paper Fig7: ~linear in consumers")
+    for n in (1, 4, 16):
+        emit(f"ensembles/fanin/{n}x1", run(n, 1), "s",
+             "paper Fig8: ~linear in producers")
+    for n in (1, 4, 16):
+        emit(f"ensembles/nxn/{n}x{n}", run(n, n), "s",
+             "paper Fig9: ~flat (1:1 pairing)")
+
+
+if __name__ == "__main__":
+    main()

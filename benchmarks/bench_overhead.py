@@ -1,0 +1,106 @@
+"""Paper Fig. 4: overhead of Wilkins vs the transport layer alone.
+
+The paper couples producer/consumer with hand-written LowFive code (no
+workflow system) and compares against Wilkins on top.  Here the "LowFive
+alone" baseline drives a raw ``Channel`` + VOL pair by hand; the Wilkins run
+uses the YAML + driver.  Weak scaling in *logical ranks*: data grows
+proportionally (10^5 grid + particles per logical rank, paper uses 10^6 per
+MPI process).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import h5, Wilkins
+from repro.core.channel import Channel
+from repro.core.datamodel import File
+from repro.core.vol import VOL, pop_vol, push_vol
+
+from .common import Timer, emit, synthetic_datasets, total_bytes
+
+STEPS = 3
+
+
+def lowfive_alone(n_ranks: int) -> float:
+    """Hand-driven transport: producer VOL -> channel -> consumer reads."""
+    ch = Channel("raw", ("p", 0), ("c", 0), "outfile.h5",
+                 ["/group1/grid", "/group1/particles"])
+    vol = VOL("p", nprocs=n_ranks)
+    vol.outgoing.append(ch)
+    import threading
+
+    def consume():
+        while True:
+            f = ch.get()
+            if f is None:
+                return
+
+    th = threading.Thread(target=consume, daemon=True)
+    th.start()
+    t0 = time.monotonic()
+    for t in range(STEPS):
+        grid, parts = synthetic_datasets(100_000 * n_ranks,
+                                         100_000 * n_ranks, t)
+        f = File("outfile.h5")
+        f.create_dataset("/group1/grid", data=grid)
+        f.create_dataset("/group1/particles", data=parts)
+        vol.on_file_close(f)
+    vol.finalize()
+    th.join(timeout=30)
+    return time.monotonic() - t0
+
+
+def wilkins(n_ranks: int) -> float:
+    yaml = f"""
+tasks:
+  - func: producer
+    nprocs: {max(1, 3 * n_ranks // 4)}
+    outports:
+      - filename: outfile.h5
+        dsets:
+          - {{name: /group1/grid, memory: 1}}
+          - {{name: /group1/particles, memory: 1}}
+  - func: consumer
+    nprocs: {max(1, n_ranks // 4)}
+    inports:
+      - filename: outfile.h5
+        dsets:
+          - {{name: /group1/grid, memory: 1}}
+          - {{name: /group1/particles, memory: 1}}
+"""
+    def producer():
+        for t in range(STEPS):
+            with h5.File("outfile.h5", "w") as f:
+                grid, parts = synthetic_datasets(100_000 * n_ranks,
+                                                 100_000 * n_ranks, t)
+                f.create_dataset("/group1/grid", data=grid)
+                f.create_dataset("/group1/particles", data=parts)
+
+    def consumer():
+        while True:
+            f = h5.File("outfile.h5", "r")
+            if f is None:
+                return
+
+    w = Wilkins(yaml, {"producer": producer, "consumer": consumer})
+    with Timer() as t:
+        w.run(timeout=120)
+    return t.dt
+
+
+def main() -> None:
+    for n_ranks in (4, 16, 64):
+        base = lowfive_alone(n_ranks)
+        full = wilkins(n_ranks)
+        mib = total_bytes(100_000 * n_ranks, 100_000 * n_ranks) * STEPS / 2**20
+        emit(f"overhead/lowfive_alone/r{n_ranks}", base, "s", f"{mib:.1f}MiB")
+        emit(f"overhead/wilkins/r{n_ranks}", full, "s", f"{mib:.1f}MiB")
+        emit(f"overhead/ratio/r{n_ranks}", full / max(base, 1e-9), "x",
+             "paper: ~1.02x at 1K procs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Shared helpers for the benchmark suite (paper §4 setup, scaled to 1 host).
+
+The paper's synthetic data: per producer process 10^6 grid points (u64) and
+10^6 particles (3 x f32) = 19 MiB.  We keep the exact data model and scale
+counts so each benchmark finishes in seconds on one CPU; every benchmark
+prints ``name,value,unit,derived`` CSV rows so `benchmarks.run` can be diffed
+run-over-run.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, value: float, unit: str, derived: str = "") -> None:
+    row = f"{name},{value:.6g},{unit},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def synthetic_datasets(n_grid: int = 100_000, n_particles: int = 100_000,
+                       t: int = 0):
+    """The paper's grid (u64 scalars) + particles (3-vec f32) datasets."""
+    grid = np.arange(n_grid, dtype=np.uint64) + t
+    parts = np.full((n_particles, 3), float(t), np.float32)
+    return grid, parts
+
+
+def total_bytes(n_grid: int, n_particles: int) -> int:
+    return n_grid * 8 + n_particles * 12
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc):
+        self.dt = time.monotonic() - self.t0
+        return False

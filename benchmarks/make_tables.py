@@ -1,0 +1,77 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline markdown tables from
+results/dryrun/*.json.  Run after the dry-run grid:
+
+    PYTHONPATH=src python -m benchmarks.make_tables > results/roofline_tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_all():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def baseline_table(rows):
+    print("| arch | shape | mesh | mem GiB | t_compute ms | t_memory ms | "
+          "t_collective ms | bound | useful | frac(RL) |")
+    print("|---|---|---|---:|---:|---:|---:|---|---:|---:|")
+    for r in rows:
+        if r.get("tag"):
+            continue
+        rf = r["roofline"]
+        # decode/prefill cells are judged against the bandwidth roofline when
+        # memory-bound; frac reported as useful-time / bound-time
+        frac = rf["roofline_fraction"]
+        if rf["bottleneck"] == "memory":
+            frac = rf["t_memory"] / max(rf["t_compute"], rf["t_memory"],
+                                        rf["t_collective"])
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {r['memory']['peak_bytes'] / 2**30:.2f} "
+              f"| {rf['t_compute'] * 1e3:.2f} | {rf['t_memory'] * 1e3:.2f} "
+              f"| {rf['t_collective'] * 1e3:.2f} | {rf['bottleneck']} "
+              f"| {rf['useful_flop_ratio']:.3f} | {frac:.3f} |")
+
+
+def variants_table(rows):
+    cells = defaultdict(dict)
+    for r in rows:
+        key = (r["arch"], r["shape"], r["mesh"])
+        cells[key][r.get("tag") or "baseline"] = r
+    print("\n| arch | shape | mesh | variant | t_coll ms | vs baseline "
+          "| bound | mem GiB |")
+    print("|---|---|---|---|---:|---:|---|---:|")
+    for key in sorted(cells):
+        tags = cells[key]
+        if len(tags) < 2 or "baseline" not in tags:
+            continue
+        base = tags["baseline"]["roofline"]["t_collective"]
+        for tag, r in sorted(tags.items()):
+            rf = r["roofline"]
+            ratio = base / rf["t_collective"] if rf["t_collective"] else float("inf")
+            print(f"| {key[0]} | {key[1]} | {key[2]} | {tag} "
+                  f"| {rf['t_collective'] * 1e3:.2f} | {ratio:.1f}x "
+                  f"| {rf['bottleneck']} "
+                  f"| {r['memory']['peak_bytes'] / 2**30:.2f} |")
+
+
+def main():
+    rows = load_all()
+    print("## Baseline roofline grid\n")
+    baseline_table(rows)
+    print("\n## Variant (hillclimb) cells\n")
+    variants_table(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Roofline table: reads the dry-run JSONs and prints the per-(arch x shape x
+mesh) three-term roofline with bottleneck + useful-flop ratio (§Roofline).
+
+Run the dry-run grid first:  python -m repro.launch.dryrun --all --mesh both
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+HEADER = (f"{'arch':<22} {'shape':<12} {'mesh':<9} {'tag':<8} "
+          f"{'mem GiB':>8} {'t_comp ms':>10} {'t_mem ms':>9} {'t_coll ms':>10} "
+          f"{'bound':<10} {'useful':>7} {'fracRL':>7}")
+
+
+def load(tag: Optional[str] = None) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag is None and r.get("tag"):
+            continue
+        if tag is not None and r.get("tag") != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt(r: Dict) -> str:
+    rf = r["roofline"]
+    return (f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<9} "
+            f"{(r.get('tag') or '-'):<8} "
+            f"{r['memory']['peak_bytes'] / 2**30:>8.2f} "
+            f"{rf['t_compute'] * 1e3:>10.2f} {rf['t_memory'] * 1e3:>9.2f} "
+            f"{rf['t_collective'] * 1e3:>10.2f} {rf['bottleneck']:<10} "
+            f"{rf['useful_flop_ratio']:>7.3f} {rf['roofline_fraction']:>7.3f}")
+
+
+def main() -> None:
+    rows = load()
+    if not rows:
+        print("no dry-run results found; run: python -m repro.launch.dryrun --all")
+        return
+    print(HEADER)
+    for r in rows:
+        print(fmt(r))
+    bounds: Dict[str, int] = {}
+    for r in rows:
+        b = r["roofline"]["bottleneck"]
+        bounds[b] = bounds.get(b, 0) + 1
+    print(f"\ncells={len(rows)} bottlenecks={bounds}")
+    worst = sorted(rows, key=lambda r: r["roofline"]["roofline_fraction"])[:5]
+    print("worst roofline fractions:")
+    for r in worst:
+        print(f"  {r['arch']} {r['shape']} {r['mesh']}: "
+              f"{r['roofline']['roofline_fraction']:.4f} "
+              f"({r['roofline']['bottleneck']}-bound)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark suite entry point: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+  overhead     -> paper Fig. 4  (Wilkins vs transport-alone, weak scaling)
+  flowcontrol  -> paper Table 2 + Fig. 5 (all/some/latest, Gantt CSV)
+  ensembles    -> paper Figs. 7/8/9 (fan-out / fan-in / NxN)
+  nucleation   -> paper Fig. 10 (materials-science NxN ensemble, nwriters=1)
+  cosmo        -> paper Table 3 (Nyx+Reeber, custom actions + io_freq sweep)
+  roofline     -> §Roofline table from the dry-run grid (not a paper artifact)
+
+Every benchmark prints ``name,value,unit,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+SUITES = ("overhead", "flowcontrol", "ensembles", "nucleation", "cosmo",
+          "roofline")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=SUITES, default=None)
+    args = ap.parse_args()
+    suites = [args.only] if args.only else list(SUITES)
+
+    cwd = os.getcwd()
+    failures = 0
+    for name in suites:
+        print(f"\n==== {name} ====", flush=True)
+        t0 = time.monotonic()
+        try:
+            if name == "roofline":
+                from . import roofline as mod
+            else:
+                mod = __import__(f"benchmarks.bench_{name}",
+                                 fromlist=["main"])
+            mod.main()
+            print(f"==== {name} done in {time.monotonic() - t0:.1f}s ====",
+                  flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"==== {name} FAILED ====", flush=True)
+        finally:
+            os.chdir(cwd)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,43 @@
+"""repro.core -- the Wilkins in situ workflow system (the paper's contribution).
+
+Layers (paper Fig. 1):
+  workflow driver   -> driver.Wilkins            (Wilkins-master)
+  workflow graph    -> graph.WorkflowGraph       (data-centric YAML matching)
+  execution         -> comm.TaskComm             (restricted worlds)
+  data transport    -> channel.Channel           (flow control all/some/latest)
+                       redistribute              (M->N planning + executors)
+  data model / VOL  -> datamodel, vol, h5        (HDF5 data model + interception)
+"""
+
+from . import datamodel, h5, redistribute
+from .channel import Channel, ChannelStats, FlowControl
+from .comm import TaskComm, world
+from .datamodel import BlockOwnership, Dataset, File, Group
+from .driver import TaskFailure, Wilkins, WorkflowReport
+from .graph import DsetSpec, Edge, Port, TaskSpec, WorkflowGraph
+from .vol import VOL, current_vol
+
+__all__ = [
+    "datamodel",
+    "h5",
+    "redistribute",
+    "Channel",
+    "ChannelStats",
+    "FlowControl",
+    "TaskComm",
+    "world",
+    "BlockOwnership",
+    "Dataset",
+    "File",
+    "Group",
+    "TaskFailure",
+    "Wilkins",
+    "WorkflowReport",
+    "DsetSpec",
+    "Edge",
+    "Port",
+    "TaskSpec",
+    "WorkflowGraph",
+    "VOL",
+    "current_vol",
+]

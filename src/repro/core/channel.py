@@ -1,0 +1,215 @@
+"""Producer->consumer channels with Wilkins' three flow-control strategies.
+
+A Channel couples one producer task *instance* to one consumer task *instance*
+for one matched (filename pattern, dataset patterns) port pair.  Channels are
+created by the driver from the data-centric YAML matching (``graph.py``) --
+users never construct them.
+
+Flow control (paper §3.6), selected by ``io_freq``:
+
+* ``all``    (io_freq in {0,1}) -- rendezvous: the producer blocks at file
+  close until the consumer has taken the previous item (queue of depth 1).
+* ``some``   (io_freq = N > 1) -- the producer serves only every Nth file
+  close; skipped closes drop the data immediately and the producer continues.
+* ``latest`` (io_freq = -1)    -- the producer serves only if the consumer is
+  currently waiting for data; otherwise it skips this timestep.  Older data
+  are never queued, so the consumer always sees the freshest snapshot.
+
+The channel also implements the producer-query protocol of §3.5.1: when the
+producer finishes it marks the channel done; a consumer ``get()`` after that
+returns ``None`` ("all done"), which is how stateful consumers exit their loop
+and how the driver decides to stop relaunching stateless consumers.
+
+Every state transition is recorded as a timestamped event so benchmarks can
+reconstruct the paper's Fig. 5 Gantt charts.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .datamodel import File, match_file, match_path
+
+__all__ = ["FlowControl", "Channel", "ChannelStats"]
+
+
+class FlowControl:
+    ALL = "all"
+    SOME = "some"
+    LATEST = "latest"
+
+    @staticmethod
+    def from_io_freq(io_freq: int) -> Tuple[str, int]:
+        """Decode the paper's io_freq field: 0/1 -> all, N>1 -> some(N), -1 -> latest."""
+        if io_freq in (0, 1):
+            return FlowControl.ALL, 1
+        if io_freq > 1:
+            return FlowControl.SOME, int(io_freq)
+        if io_freq == -1:
+            return FlowControl.LATEST, 1
+        raise ValueError(f"invalid io_freq {io_freq}")
+
+
+@dataclass
+class ChannelStats:
+    served: int = 0
+    dropped: int = 0
+    bytes_moved: int = 0
+    producer_wait_s: float = 0.0
+    consumer_wait_s: float = 0.0
+    events: List[Tuple[float, str, str]] = field(default_factory=list)  # (t, who, what)
+
+
+class Channel:
+    """One producer-instance -> consumer-instance coupling for one file port."""
+
+    def __init__(
+        self,
+        name: str,
+        producer: Tuple[str, int],
+        consumer: Tuple[str, int],
+        filename_pattern: str,
+        dset_patterns: Sequence[str],
+        mode: str = "memory",  # "memory" (in-situ) | "file" (spill through disk)
+        io_freq: int = 1,
+        spill_dir: Optional[str] = None,
+        record_events: bool = False,
+    ):
+        self.name = name
+        self.producer = producer
+        self.consumer = consumer
+        self.filename_pattern = filename_pattern
+        self.dset_patterns = list(dset_patterns)
+        assert mode in ("memory", "file"), mode
+        self.mode = mode
+        self.strategy, self.freq = FlowControl.from_io_freq(io_freq)
+        self.spill_dir = spill_dir or os.path.join("/tmp", "wilkins_spill")
+        self.record_events = record_events
+
+        self._lock = threading.Condition()
+        self._item: Optional[Any] = None  # depth-1 slot (rendezvous semantics)
+        self._done = False
+        self._consumer_waiting = 0
+        self._close_count = 0
+        self.stats = ChannelStats()
+
+    # ------------------------------------------------------------------ util
+    def _event(self, who: str, what: str) -> None:
+        if self.record_events:
+            self.stats.events.append((time.monotonic(), who, what))
+
+    def matches_file(self, filename: str) -> bool:
+        return match_file(self.filename_pattern, filename) or match_file(
+            filename, self.filename_pattern
+        )
+
+    def filter_file(self, f: File) -> File:
+        """Data-centric selection: ship only the datasets this port asked for."""
+        out = File(f.filename)
+        out.attrs.update(f.attrs)
+        n = 0
+        for ds in f.visit_datasets():
+            if any(match_path(p, ds.path) for p in self.dset_patterns):
+                nd = out.create_dataset(ds.path, data=ds.read_direct())
+                nd.attrs.update(ds.attrs)
+                nd.ownership = ds.ownership
+                n += 1
+        return out
+
+    # ------------------------------------------------------------- producer
+    def offer(self, f: File) -> bool:
+        """Producer-side serve with flow control. Returns True if served.
+
+        Called from the VOL layer at (after-)file-close time, mirroring
+        LowFive's serve-on-close. The flow-control decision happens *before*
+        any data is copied or queued, so a skipped timestep costs nothing --
+        that is the entire point of the paper's §3.6.
+        """
+        with self._lock:
+            self._close_count += 1
+            if self.strategy == FlowControl.SOME and (self._close_count % self.freq) != 0:
+                self.stats.dropped += 1
+                self._event("producer", "skip_some")
+                return False
+            if self.strategy == FlowControl.LATEST and self._consumer_waiting == 0:
+                # No incoming request from the consumer: skip this timestep
+                # and proceed to generating the next one (paper §3.6).
+                self.stats.dropped += 1
+                self._event("producer", "skip_latest")
+                return False
+
+        payload = self._prepare(f)
+        t0 = time.monotonic()
+        with self._lock:
+            self._event("producer", "wait_begin")
+            while self._item is not None and not self._done:
+                self._lock.wait()
+            self.stats.producer_wait_s += time.monotonic() - t0
+            self._event("producer", "wait_end")
+            if self._done:
+                return False
+            self._item = payload
+            self.stats.served += 1
+            self.stats.bytes_moved += f.total_bytes()
+            self._event("producer", "serve")
+            self._lock.notify_all()
+        return True
+
+    def _prepare(self, f: File) -> Any:
+        sub = self.filter_file(f)
+        if self.mode == "file":
+            # Spill through "disk" -- the paper's ``file: 1`` transport path.
+            path = sub.save(self.spill_dir)
+            return ("file", path)
+        return ("memory", sub)
+
+    def finish(self) -> None:
+        """Producer signals all-done (query protocol: empty filename list)."""
+        with self._lock:
+            self._done = True
+            self._event("producer", "done")
+            self._lock.notify_all()
+
+    # ------------------------------------------------------------- consumer
+    def get(self, timeout: Optional[float] = None) -> Optional[File]:
+        """Consumer-side blocking receive; None means producer is all-done."""
+        t0 = time.monotonic()
+        with self._lock:
+            self._consumer_waiting += 1
+            self._lock.notify_all()  # wake a producer doing `latest` rendezvous
+            self._event("consumer", "wait_begin")
+            try:
+                while self._item is None and not self._done:
+                    if not self._lock.wait(timeout=timeout):
+                        return None
+                self.stats.consumer_wait_s += time.monotonic() - t0
+                self._event("consumer", "wait_end")
+                if self._item is None:
+                    return None  # all done
+                kind, payload = self._item
+                self._item = None
+                self._lock.notify_all()
+            finally:
+                self._consumer_waiting -= 1
+        self._event("consumer", "recv")
+        if kind == "file":
+            return File.load(payload)
+        return payload
+
+    def peek_pending(self) -> bool:
+        with self._lock:
+            return self._item is not None
+
+    def is_done(self) -> bool:
+        with self._lock:
+            return self._done and self._item is None
+
+    def __repr__(self) -> str:
+        return (
+            f"<Channel {self.name} {self.producer}->{self.consumer} "
+            f"{self.filename_pattern} mode={self.mode} fc={self.strategy}/{self.freq}>"
+        )

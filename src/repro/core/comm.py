@@ -1,0 +1,81 @@
+"""Restricted-world communicators -- the PMPI-partitioning analogue.
+
+Wilkins runs all tasks as one SPMD job and presents each task with a
+*restricted* MPI_COMM_WORLD so task codes can be written as if they were the
+only program running (paper §3.5).  In the JAX adaptation the resources being
+partitioned are *devices* (and logical ranks for the host-side runtime): the
+driver slices the global device list into disjoint per-task groups sized
+proportionally to ``nprocs`` and hands every task a ``TaskComm`` that exposes
+
+* ``size``/``rank``       -- the logical process view (nprocs from YAML),
+* ``io_procs``            -- the subset-of-writers count (``nwriters`` field),
+* ``devices`` / ``mesh()``-- the task's restricted JAX device group.
+
+Task code obtains its communicator with ``comm.world()`` -- which returns the
+restricted world inside a workflow and a trivial single-rank world standalone,
+so the code is, again, identical in both settings.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence, Tuple
+
+__all__ = ["TaskComm", "world", "push_comm", "pop_comm"]
+
+_tls = threading.local()
+
+
+@dataclass
+class TaskComm:
+    task: str = "__standalone__"
+    instance: int = 0
+    rank: int = 0
+    size: int = 1
+    io_procs: int = 1
+    rank_offset: int = 0          # position in the global SPMD rank space
+    devices: Optional[List[Any]] = None   # restricted JAX device group
+    mesh_axes: Tuple[str, ...] = ("data",)
+    extras: dict = field(default_factory=dict)
+
+    def is_io_proc(self, rank: Optional[int] = None) -> bool:
+        r = self.rank if rank is None else rank
+        return r < self.io_procs
+
+    def mesh(self, shape: Optional[Tuple[int, ...]] = None,
+             axes: Optional[Tuple[str, ...]] = None):
+        """Build a Mesh over this task's restricted device group."""
+        import numpy as np
+        import jax
+
+        devs = self.devices
+        if devs is None:
+            devs = jax.devices()[:1]
+        if shape is None:
+            shape = (len(devs),)
+        if axes is None:
+            axes = self.mesh_axes[: len(shape)]
+        arr = np.asarray(devs[: int(np.prod(shape))]).reshape(shape)
+        return jax.sharding.Mesh(arr, axes)
+
+    def barrier(self) -> None:  # single-process runtime: no-op
+        pass
+
+
+def world() -> TaskComm:
+    """The task's restricted world (or a standalone single-rank world)."""
+    stack = getattr(_tls, "comm_stack", None)
+    if stack and stack[-1] is not None:
+        return stack[-1]
+    return TaskComm()
+
+
+def push_comm(c: Optional[TaskComm]) -> None:
+    if not hasattr(_tls, "comm_stack"):
+        _tls.comm_stack = []
+    _tls.comm_stack.append(c)
+
+
+def pop_comm() -> None:
+    _tls.comm_stack.pop()

@@ -1,0 +1,340 @@
+"""HDF5-style hierarchical data model (the LowFive/HDF5 data-model layer).
+
+The real Wilkins rides on HDF5's data model via the LowFive VOL plugin.  h5py /
+libhdf5 are not available in this environment, so we implement the *data model*
+itself -- hierarchical groups, typed n-dimensional datasets, attributes, and
+hyperslab (partial) selection -- with numpy/JAX arrays as storage.  The VOL
+boundary (``repro.core.vol``) intercepts operations on this tree exactly like
+LowFive intercepts HDF5 calls, which is the interface the paper actually
+defines.
+
+Objects
+-------
+``Dataset``  -- typed ndarray leaf + attributes + (optional) per-rank block
+                ownership map used by the M->N redistribution layer.
+``Group``    -- named children (groups or datasets) + attributes.
+``File``     -- root group + filename; knows how to spill to / load from disk
+                (npz + json container: *our container, HDF5's data model*).
+
+Paths follow HDF5 conventions: ``/group1/particles`` etc.  Glob matching for
+ports ("*.h5", "/particles/*") lives here too since it is a data-model level
+concern.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import io
+import json
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+__all__ = [
+    "Dataset",
+    "Group",
+    "File",
+    "BlockOwnership",
+    "match_path",
+    "match_file",
+    "split_path",
+]
+
+
+def split_path(path: str) -> List[str]:
+    """Split an HDF5 path into components, ignoring leading/duplicate slashes."""
+    return [p for p in path.split("/") if p]
+
+
+def match_path(pattern: str, path: str) -> bool:
+    """HDF5-path glob matching. ``/group1/*`` matches ``/group1/grid``.
+
+    A bare ``*`` component matches one level; a trailing ``*`` after a group
+    prefix matches any suffix (LowFive-style prefix semantics), so
+    ``/particles/*`` matches ``/particles/pos/value`` as well.
+    """
+    pat = "/" + "/".join(split_path(pattern))
+    p = "/" + "/".join(split_path(path))
+    if fnmatch.fnmatch(p, pat):
+        return True
+    # prefix semantics for trailing '*': /a/* also matches deeper paths
+    if pat.endswith("/*") and fnmatch.fnmatch(p, pat + "/*"):
+        return True
+    # a pattern naming a group matches everything below it
+    if fnmatch.fnmatch(p, pat.rstrip("/") + "/*"):
+        return True
+    return False
+
+
+def match_file(pattern: str, filename: str) -> bool:
+    """Filename glob matching: ``plt*.h5`` matches ``plt00010.h5``."""
+    return fnmatch.fnmatch(os.path.basename(filename), os.path.basename(pattern))
+
+
+@dataclass
+class BlockOwnership:
+    """Which logical producer rank owns which hyperslab of a dataset.
+
+    ``blocks[rank] = (starts, shape)`` -- the rank's block in global index
+    space.  This is the metadata LowFive exchanges to plan M->N
+    redistribution; we carry it on the Dataset so the redistribution layer can
+    compute overlaps without touching the data.
+    """
+
+    blocks: Dict[int, Tuple[Tuple[int, ...], Tuple[int, ...]]] = field(
+        default_factory=dict
+    )
+
+    def add(self, rank: int, starts: Sequence[int], shape: Sequence[int]) -> None:
+        self.blocks[rank] = (tuple(starts), tuple(shape))
+
+    def nranks(self) -> int:
+        return len(self.blocks)
+
+
+class Dataset:
+    """A typed n-d array leaf with attributes and hyperslab read/write."""
+
+    def __init__(
+        self,
+        name: str,
+        shape: Tuple[int, ...],
+        dtype: Any,
+        data: Optional[np.ndarray] = None,
+        parent: Optional["Group"] = None,
+    ):
+        self.name = name
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = np.dtype(dtype)
+        self.attrs: Dict[str, Any] = {}
+        self.parent = parent
+        self.ownership: Optional[BlockOwnership] = None
+        if data is not None:
+            data = np.asarray(data)
+            assert data.shape == self.shape, (data.shape, self.shape)
+            self._data = np.ascontiguousarray(data, dtype=self.dtype)
+        else:
+            self._data = np.zeros(self.shape, dtype=self.dtype)
+
+    # -- HDF5-ish surface ---------------------------------------------------
+    @property
+    def path(self) -> str:
+        if self.parent is None:
+            return "/" + self.name
+        return self.parent.path.rstrip("/") + "/" + self.name
+
+    def __getitem__(self, key) -> np.ndarray:
+        return self._data[key]
+
+    def __setitem__(self, key, value) -> None:
+        self._data[key] = value
+
+    def read_direct(self) -> np.ndarray:
+        return self._data
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * self.dtype.itemsize if self.shape else self.dtype.itemsize
+
+    def select(self, starts: Sequence[int], shape: Sequence[int]) -> np.ndarray:
+        """Hyperslab read (contiguous block selection)."""
+        slc = tuple(slice(s, s + n) for s, n in zip(starts, shape))
+        return self._data[slc]
+
+    def write_slab(self, starts: Sequence[int], block: np.ndarray) -> None:
+        slc = tuple(slice(s, s + n) for s, n in zip(starts, block.shape))
+        self._data[slc] = block
+
+    def __repr__(self) -> str:
+        return f"<Dataset {self.path} shape={self.shape} dtype={self.dtype}>"
+
+
+class Group:
+    """Named collection of sub-groups and datasets."""
+
+    def __init__(self, name: str, parent: Optional["Group"] = None):
+        self.name = name
+        self.parent = parent
+        self.children: Dict[str, Union["Group", Dataset]] = {}
+        self.attrs: Dict[str, Any] = {}
+
+    @property
+    def path(self) -> str:
+        if self.parent is None:
+            return "/"
+        base = self.parent.path
+        return (base if base.endswith("/") else base + "/") + self.name
+
+    def require_group(self, path: str) -> "Group":
+        node: Group = self
+        for comp in split_path(path):
+            child = node.children.get(comp)
+            if child is None:
+                child = Group(comp, parent=node)
+                node.children[comp] = child
+            elif not isinstance(child, Group):
+                raise TypeError(f"{child.path} is a dataset, not a group")
+            node = child
+        return node
+
+    def create_dataset(
+        self,
+        path: str,
+        shape: Optional[Tuple[int, ...]] = None,
+        dtype: Any = None,
+        data: Optional[np.ndarray] = None,
+    ) -> Dataset:
+        comps = split_path(path)
+        if not comps:
+            raise ValueError("empty dataset path")
+        parent = self.require_group("/".join(comps[:-1])) if len(comps) > 1 else self
+        if data is not None:
+            data = np.asarray(data)
+            shape = data.shape if shape is None else tuple(shape)
+            dtype = data.dtype if dtype is None else dtype
+        if shape is None or dtype is None:
+            raise ValueError("need shape+dtype or data")
+        ds = Dataset(comps[-1], tuple(shape), dtype, data=data, parent=parent)
+        parent.children[comps[-1]] = ds
+        return ds
+
+    def get(self, path: str) -> Optional[Union["Group", Dataset]]:
+        node: Union[Group, Dataset] = self
+        for comp in split_path(path):
+            if not isinstance(node, Group):
+                return None
+            nxt = node.children.get(comp)
+            if nxt is None:
+                return None
+            node = nxt
+        return node
+
+    def __getitem__(self, path: str) -> Union["Group", Dataset]:
+        node = self.get(path)
+        if node is None:
+            raise KeyError(f"no object at {path!r} under {self.path!r}")
+        return node
+
+    def __contains__(self, path: str) -> bool:
+        return self.get(path) is not None
+
+    def visit_datasets(self) -> Iterator[Dataset]:
+        for child in self.children.values():
+            if isinstance(child, Dataset):
+                yield child
+            else:
+                yield from child.visit_datasets()
+
+    def __repr__(self) -> str:
+        return f"<Group {self.path} ({len(self.children)} children)>"
+
+
+class File(Group):
+    """Root of the tree; also the unit of transport in Wilkins.
+
+    LowFive serves data producer->consumer at file-close granularity; the
+    channel layer ships ``File`` objects (or their metadata + selected
+    datasets).  ``save``/``load`` implement the *file* transport option
+    (``file: 1`` in YAML) -- data spilled through the filesystem in an
+    npz+json container (h5py unavailable; data model preserved).
+    """
+
+    def __init__(self, filename: str):
+        super().__init__("")
+        self.filename = filename
+        self.closed = False
+
+    @property
+    def path(self) -> str:
+        return "/"
+
+    # -- disk container (the ``file: 1`` transport path) ---------------------
+    def save(self, directory: str) -> str:
+        os.makedirs(directory, exist_ok=True)
+        target = os.path.join(directory, os.path.basename(self.filename))
+        arrays: Dict[str, np.ndarray] = {}
+        meta: Dict[str, Any] = {"filename": self.filename, "datasets": {}, "attrs": {}}
+
+        def walk(g: Group, prefix: str) -> None:
+            for nm, child in g.children.items():
+                p = prefix + "/" + nm
+                if isinstance(child, Dataset):
+                    key = f"d{len(arrays)}"
+                    arrays[key] = child.read_direct()
+                    meta["datasets"][p] = {
+                        "key": key,
+                        "attrs": _jsonable(child.attrs),
+                        "ownership": (
+                            {str(r): [list(s), list(sh)] for r, (s, sh) in child.ownership.blocks.items()}
+                            if child.ownership
+                            else None
+                        ),
+                    }
+                else:
+                    walk(child, p)
+
+        walk(self, "")
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        tmp = target + ".tmp"
+        with open(tmp, "wb") as f:
+            header = json.dumps(meta).encode()
+            f.write(len(header).to_bytes(8, "little"))
+            f.write(header)
+            f.write(buf.getvalue())
+        os.replace(tmp, target)  # atomic
+        return target
+
+    @classmethod
+    def load(cls, path: str) -> "File":
+        with open(path, "rb") as f:
+            hlen = int.from_bytes(f.read(8), "little")
+            meta = json.loads(f.read(hlen).decode())
+            npz = np.load(io.BytesIO(f.read()))
+        out = cls(meta["filename"])
+        for dpath, info in meta["datasets"].items():
+            ds = out.create_dataset(dpath, data=npz[info["key"]])
+            ds.attrs.update(info.get("attrs") or {})
+            own = info.get("ownership")
+            if own:
+                bo = BlockOwnership()
+                for r, (s, sh) in own.items():
+                    bo.add(int(r), s, sh)
+                ds.ownership = bo
+        return out
+
+    def total_bytes(self) -> int:
+        return sum(d.nbytes for d in self.visit_datasets())
+
+    def copy_meta_only(self) -> "File":
+        """Shallow structural copy (metadata broadcast path, cf. Listing 5)."""
+        out = File(self.filename)
+
+        def walk(src: Group, dst: Group) -> None:
+            dst.attrs.update(src.attrs)
+            for nm, child in src.children.items():
+                if isinstance(child, Dataset):
+                    nd = dst.create_dataset(nm, shape=child.shape, dtype=child.dtype)
+                    nd.attrs.update(child.attrs)
+                    nd.ownership = child.ownership
+                else:
+                    walk(child, dst.require_group(nm))
+
+        walk(self, out)
+        return out
+
+
+def _jsonable(d: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in d.items():
+        if isinstance(v, (np.integer,)):
+            v = int(v)
+        elif isinstance(v, (np.floating,)):
+            v = float(v)
+        elif isinstance(v, np.ndarray):
+            v = v.tolist()
+        out[k] = v
+    return out

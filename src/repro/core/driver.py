@@ -1,0 +1,306 @@
+"""Wilkins-master: the generic workflow driver (paper §3.3, §3.5).
+
+The driver (i) reads the workflow YAML and builds the matched graph,
+(ii) partitions global resources into restricted per-task worlds,
+(iii) creates the channels for every matched edge x ensemble-instance pair
+with the configured transport mode and flow control, (iv) installs a VOL
+object per task instance and loads custom actions, and (v) launches the task
+callables and runs them to completion -- relaunching stateless consumers while
+matched producers still have data (the query protocol) and restarting failed
+tasks up to a restart budget (fault tolerance).
+
+Users never modify this code; everything is driven by the YAML plus optional
+external action scripts -- exactly the paper's usability contract.
+
+Execution model notes (hardware adaptation, see DESIGN.md): task instances run
+as Python threads (Henson-style cooperative coroutines are used by the tests
+for determinism where needed).  SPMD rank parallelism *within* a task is
+carried by the data model (BlockOwnership on datasets + the M->N
+redistribution planner) and by the task's restricted JAX device group, rather
+than by OS processes.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from . import actions as actions_mod
+from .channel import Channel
+from .comm import TaskComm, pop_comm, push_comm
+from .graph import WorkflowGraph
+from .vol import VOL, pop_vol, push_vol
+
+__all__ = ["Wilkins", "WorkflowReport", "TaskFailure"]
+
+
+@dataclass
+class TaskFailure:
+    task: str
+    instance: int
+    attempt: int
+    error: str
+
+
+@dataclass
+class WorkflowReport:
+    wall_time_s: float = 0.0
+    task_times: Dict[Tuple[str, int], float] = field(default_factory=dict)
+    task_launches: Dict[Tuple[str, int], int] = field(default_factory=dict)
+    channels: List[Channel] = field(default_factory=list)
+    failures: List[TaskFailure] = field(default_factory=list)
+
+    @property
+    def total_bytes_moved(self) -> int:
+        return sum(c.stats.bytes_moved for c in self.channels)
+
+    @property
+    def total_served(self) -> int:
+        return sum(c.stats.served for c in self.channels)
+
+    @property
+    def total_dropped(self) -> int:
+        return sum(c.stats.dropped for c in self.channels)
+
+    def gantt_events(self) -> List[Tuple[float, str, str, str]]:
+        out = []
+        for c in self.channels:
+            for (t, who, what) in c.stats.events:
+                out.append((t, c.name, who, what))
+        return sorted(out)
+
+    def summary(self) -> str:
+        lines = [
+            f"wall_time_s={self.wall_time_s:.3f}",
+            f"served={self.total_served} dropped={self.total_dropped} "
+            f"bytes={self.total_bytes_moved}",
+        ]
+        for (task, inst), t in sorted(self.task_times.items()):
+            lines.append(
+                f"  {task}[{inst}]: {t:.3f}s launches={self.task_launches.get((task, inst), 1)}"
+            )
+        for f in self.failures:
+            lines.append(f"  FAILURE {f.task}[{f.instance}] attempt={f.attempt}: {f.error}")
+        return "\n".join(lines)
+
+
+class Wilkins:
+    """The workflow runtime. Construct with YAML + task callables, then run().
+
+    Parameters
+    ----------
+    config:        YAML path, YAML string, or parsed dict (paper Listing 1/2/4/6).
+    funcs:         mapping from task ``func`` name to a Python callable.  A
+                   callable may take zero args (fully unmodified code reading
+                   its world via ``repro.core.comm.world()``) or one arg (the
+                   TaskComm).
+    devices:       optional list of JAX devices to partition among tasks
+                   proportionally to nprocs (restricted worlds).
+    spill_dir:     directory for the ``file: 1`` transport path.
+    record_events: keep per-channel event timelines (Gantt / Fig. 5).
+    max_restarts:  per-instance restart budget on task failure (fault tolerance).
+    action_dirs:   extra directories to search for custom action scripts.
+    """
+
+    def __init__(
+        self,
+        config: Union[str, Dict[str, Any]],
+        funcs: Dict[str, Callable],
+        devices: Optional[Sequence[Any]] = None,
+        spill_dir: Optional[str] = None,
+        record_events: bool = False,
+        max_restarts: int = 0,
+        action_dirs: Sequence[str] = (),
+    ):
+        self.graph = config if isinstance(config, WorkflowGraph) else WorkflowGraph.from_yaml(config)
+        self.funcs = dict(funcs)
+        missing = [t for t in self.graph.tasks if t not in self.funcs]
+        if missing:
+            raise ValueError(f"no callable provided for tasks: {missing}")
+        self.spill_dir = spill_dir or os.path.join("/tmp", f"wilkins_spill_{os.getpid()}")
+        self.record_events = record_events
+        self.max_restarts = max_restarts
+        self.action_dirs = list(action_dirs)
+
+        self.device_groups = self._partition_devices(devices)
+        self.channels: List[Channel] = []
+        self.vols: Dict[Tuple[str, int], VOL] = {}
+        self._build()
+
+    # ------------------------------------------------------------ resources
+    def _partition_devices(
+        self, devices: Optional[Sequence[Any]]
+    ) -> Dict[Tuple[str, int], Optional[List[Any]]]:
+        """Slice the global device list into disjoint restricted worlds,
+        proportionally to nprocs (the PMPI-partitioning analogue)."""
+        groups: Dict[Tuple[str, int], Optional[List[Any]]] = {}
+        instances: List[Tuple[str, int, int]] = []  # (task, inst, nprocs)
+        for name, t in self.graph.tasks.items():
+            for i in range(t.task_count):
+                instances.append((name, i, t.nprocs))
+        if devices is None:
+            for name, i, _ in instances:
+                groups[(name, i)] = None
+            return groups
+        devices = list(devices)
+        total_procs = sum(n for _, _, n in instances) or 1
+        off = 0
+        for k, (name, i, n) in enumerate(instances):
+            share = max(1, (len(devices) * n) // total_procs)
+            if k == len(instances) - 1:
+                grp = devices[off:]
+            else:
+                grp = devices[off : off + share]
+            off = min(off + share, len(devices) - (len(instances) - 1 - k))
+            groups[(name, i)] = grp or devices[-1:]
+        return groups
+
+    # ------------------------------------------------------------ wiring
+    def _build(self) -> None:
+        for edge in self.graph.edges:
+            ptask = self.graph.tasks[edge.producer]
+            ctask = self.graph.tasks[edge.consumer]
+            for pi, ci in edge.instance_links(ptask.task_count, ctask.task_count):
+                ch = Channel(
+                    name=f"{edge.producer}[{pi}]->{edge.consumer}[{ci}]:{edge.filename_pattern}",
+                    producer=(edge.producer, pi),
+                    consumer=(edge.consumer, ci),
+                    filename_pattern=edge.filename_pattern,
+                    dset_patterns=edge.dset_patterns,
+                    mode=edge.mode,
+                    io_freq=edge.io_freq,
+                    spill_dir=self.spill_dir,
+                    record_events=self.record_events,
+                )
+                self.channels.append(ch)
+
+        rank_offset = 0
+        for name, t in self.graph.tasks.items():
+            for i in range(t.task_count):
+                vol = VOL(name, instance=i, nprocs=t.nprocs, io_procs=t.io_procs)
+                for ch in self.channels:
+                    if ch.producer == (name, i):
+                        vol.outgoing.append(ch)
+                    if ch.consumer == (name, i):
+                        vol.incoming.append(ch)
+                # memory/file VOL properties per matched port (driver sets
+                # these from YAML; LowFive equivalent of set_memory/set_file)
+                for ch in vol.outgoing + vol.incoming:
+                    if ch.mode == "memory":
+                        vol.set_memory(ch.filename_pattern)
+                    else:
+                        vol.set_file(ch.filename_pattern)
+                self.vols[(name, i)] = vol
+                rank_offset += t.nprocs
+
+    # ------------------------------------------------------------ execution
+    def _make_comm(self, name: str, inst: int) -> TaskComm:
+        t = self.graph.tasks[name]
+        return TaskComm(
+            task=name,
+            instance=inst,
+            rank=0,
+            size=t.nprocs,
+            io_procs=t.io_procs,
+            devices=self.device_groups.get((name, inst)),
+        )
+
+    def _run_instance(self, name: str, inst: int, report: WorkflowReport) -> None:
+        t = self.graph.tasks[name]
+        vol = self.vols[(name, inst)]
+        comm = self._make_comm(name, inst)
+        fn = self.funcs[name]
+        if t.actions is not None:
+            action = actions_mod.load_action(t.actions, self.action_dirs)
+            action(vol, comm.rank)
+
+        t0 = time.monotonic()
+        launches = 0
+        attempt = 0
+        try:
+            while True:
+                launches += 1
+                push_vol(vol)
+                push_comm(comm)
+                try:
+                    if _takes_arg(fn):
+                        fn(comm)
+                    else:
+                        fn()
+                except Exception as e:  # fault tolerance: restart budget
+                    report.failures.append(
+                        TaskFailure(name, inst, attempt, f"{type(e).__name__}: {e}")
+                    )
+                    attempt += 1
+                    if attempt > self.max_restarts:
+                        raise
+                    continue
+                finally:
+                    pop_comm()
+                    pop_vol()
+                # Query protocol (§3.5.1): if this task consumes and any
+                # matched producer is still live or has pending data, the
+                # consumer is stateless -- relaunch it for the next datum.
+                # Only PURE consumers participate: a task that also produces
+                # (intermediate / steering node in a cycle) is stateful by
+                # construction -- relaunching it would livelock the cycle.
+                if vol.incoming and not vol.outgoing and any(
+                    (not c.is_done()) or c.peek_pending() for c in vol.incoming
+                ):
+                    continue
+                break
+        finally:
+            vol.finalize()
+            report.task_times[(name, inst)] = time.monotonic() - t0
+            report.task_launches[(name, inst)] = launches
+
+    def run(self, timeout: Optional[float] = None) -> WorkflowReport:
+        report = WorkflowReport(channels=self.channels)
+        threads: List[threading.Thread] = []
+        errors: List[BaseException] = []
+
+        def runner(name: str, inst: int) -> None:
+            try:
+                self._run_instance(name, inst, report)
+            except BaseException as e:
+                errors.append(e)
+                # unblock everyone coupled to us
+                self.vols[(name, inst)].finalize()
+
+        t0 = time.monotonic()
+        for name, t in self.graph.tasks.items():
+            for i in range(t.task_count):
+                th = threading.Thread(
+                    target=runner, args=(name, i), name=f"wilkins-{name}-{i}", daemon=True
+                )
+                threads.append(th)
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=timeout)
+            if th.is_alive():
+                raise TimeoutError(f"task thread {th.name} did not finish")
+        report.wall_time_s = time.monotonic() - t0
+        if errors:
+            raise errors[0]
+        return report
+
+
+def _takes_arg(fn: Callable) -> bool:
+    import inspect
+
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return False
+    params = [
+        p
+        for p in sig.parameters.values()
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+        and p.default is p.empty
+    ]
+    return len(params) >= 1

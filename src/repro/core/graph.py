@@ -1,0 +1,220 @@
+"""Data-centric workflow graph construction from the YAML description.
+
+Users specify *data requirements* (inports/outports: filename + dataset name
+patterns), never edges.  Wilkins matches ports to build the task graph
+(paper §3.2): a producer outport and a consumer inport are coupled when their
+filename patterns match and at least one dataset pattern overlaps.  Any
+directed topology results -- pipeline, fan-in, fan-out, NxN, cycles.
+
+Ensembles (§3.2.1): a task with ``taskCount: N`` expands into N instances.
+For each matched edge, producer instances and consumer instances are linked
+round-robin over the *longer* index list, reproducing Fig. 3 exactly:
+4 producers x 2 consumers -> P0-C0, P1-C1, P2-C0, P3-C1;
+1 producer  x N consumers -> fan-out; N x N -> one-to-one pairing.
+
+Subset writers (§3.2.2): ``nwriters`` (the paper's ``io_proc``) restricts
+which logical ranks of a producer participate in I/O.
+
+Flow control (§3.6): ``io_freq`` on the consumer inport (1/0 = all, N>1 =
+some, -1 = latest).
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import yaml
+
+from .datamodel import match_file, match_path
+
+__all__ = ["DsetSpec", "Port", "TaskSpec", "Edge", "WorkflowGraph"]
+
+
+@dataclass
+class DsetSpec:
+    name: str
+    file: int = 0
+    memory: int = 1
+
+    @property
+    def mode(self) -> str:
+        if self.memory and not self.file:
+            return "memory"
+        if self.file and not self.memory:
+            return "file"
+        if self.file and self.memory:
+            return "memory"  # prefer in-situ when both allowed
+        raise ValueError(f"dataset {self.name}: neither file nor memory transport enabled")
+
+
+@dataclass
+class Port:
+    filename: str
+    dsets: List[DsetSpec]
+    io_freq: int = 1  # flow control (inports only)
+
+
+@dataclass
+class TaskSpec:
+    func: str
+    nprocs: int = 1
+    task_count: int = 1
+    nwriters: Optional[int] = None       # paper's io_proc / subset writers
+    actions: Optional[Tuple[str, str]] = None  # (script/module, function)
+    inports: List[Port] = field(default_factory=list)
+    outports: List[Port] = field(default_factory=list)
+    raw: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def io_procs(self) -> int:
+        return self.nwriters if self.nwriters is not None else self.nprocs
+
+
+@dataclass
+class Edge:
+    """A matched producer-outport -> consumer-inport coupling (task level)."""
+
+    producer: str
+    consumer: str
+    filename_pattern: str       # the consumer's view of the filename
+    dset_patterns: List[str]    # consumer dataset selections that matched
+    mode: str                   # "memory" | "file"
+    io_freq: int = 1
+
+    def instance_links(self, np_: int, nc: int) -> List[Tuple[int, int]]:
+        """Round-robin instance pairing over the longer list (paper Fig. 3)."""
+        n = max(np_, nc)
+        return [(i % np_, i % nc) for i in range(n)]
+
+
+def _parse_port(p: Dict[str, Any]) -> Port:
+    dsets = [
+        DsetSpec(
+            name=d["name"],
+            file=int(d.get("file", 0) or 0),
+            memory=int(d.get("memory", 0) or 0) if "memory" in d or "file" in d else 1,
+        )
+        for d in p.get("dsets", [])
+    ]
+    if not dsets:
+        dsets = [DsetSpec(name="*")]
+    return Port(filename=p["filename"], dsets=dsets, io_freq=int(p.get("io_freq", 1)))
+
+
+def _parse_task(t: Dict[str, Any]) -> TaskSpec:
+    actions = t.get("actions")
+    if actions is not None:
+        if not (isinstance(actions, (list, tuple)) and len(actions) == 2):
+            raise ValueError(f"actions must be [script, function], got {actions!r}")
+        actions = (str(actions[0]), str(actions[1]))
+    return TaskSpec(
+        func=t["func"],
+        nprocs=int(t.get("nprocs", 1)),
+        task_count=int(t.get("taskCount", 1)),
+        nwriters=int(t["nwriters"]) if "nwriters" in t else (
+            int(t["io_proc"]) if "io_proc" in t else None),
+        actions=actions,
+        inports=[_parse_port(p) for p in t.get("inports", [])],
+        outports=[_parse_port(p) for p in t.get("outports", [])],
+        raw=dict(t),
+    )
+
+
+class WorkflowGraph:
+    """Tasks + matched edges; the driver instantiates channels from this."""
+
+    def __init__(self, tasks: List[TaskSpec]):
+        names = [t.func for t in tasks]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate task func names: {names}")
+        self.tasks: Dict[str, TaskSpec] = {t.func: t for t in tasks}
+        self.edges: List[Edge] = self._match()
+
+    # ------------------------------------------------------------- loading
+    @classmethod
+    def from_yaml(cls, source: Union[str, Dict[str, Any]]) -> "WorkflowGraph":
+        if isinstance(source, str):
+            if os.path.exists(source):
+                with open(source) as f:
+                    doc = yaml.safe_load(f)
+            else:
+                doc = yaml.safe_load(source)
+        else:
+            doc = source
+        if not isinstance(doc, dict) or "tasks" not in doc:
+            raise ValueError("workflow YAML must have a top-level 'tasks' list")
+        return cls([_parse_task(t) for t in doc["tasks"]])
+
+    # ------------------------------------------------------------ matching
+    def _match(self) -> List[Edge]:
+        edges: List[Edge] = []
+        for pname, ptask in self.tasks.items():
+            for outp in ptask.outports:
+                for cname, ctask in self.tasks.items():
+                    if cname == pname:
+                        continue
+                    for inp in ctask.inports:
+                        if not (match_file(inp.filename, outp.filename)
+                                or match_file(outp.filename, inp.filename)):
+                            continue
+                        matched: List[str] = []
+                        mode = "memory"
+                        for ind in inp.dsets:
+                            for outd in outp.dsets:
+                                if match_path(ind.name, outd.name) or match_path(
+                                    outd.name, ind.name
+                                ):
+                                    matched.append(ind.name)
+                                    mode = ind.mode
+                                    break
+                        if matched:
+                            edges.append(
+                                Edge(
+                                    producer=pname,
+                                    consumer=cname,
+                                    filename_pattern=inp.filename,
+                                    dset_patterns=matched,
+                                    mode=mode,
+                                    io_freq=inp.io_freq,
+                                )
+                            )
+        return edges
+
+    # ----------------------------------------------------------- utilities
+    def producers_of(self, task: str) -> List[Edge]:
+        return [e for e in self.edges if e.consumer == task]
+
+    def consumers_of(self, task: str) -> List[Edge]:
+        return [e for e in self.edges if e.producer == task]
+
+    def total_instances(self) -> int:
+        return sum(t.task_count for t in self.tasks.values())
+
+    def total_procs(self) -> int:
+        return sum(t.nprocs * t.task_count for t in self.tasks.values())
+
+    def topology_kind(self) -> str:
+        """Classify for reporting: pipeline / fan-in / fan-out / NxN / general."""
+        if not self.edges:
+            return "disconnected"
+        kinds = set()
+        for e in self.edges:
+            np_ = self.tasks[e.producer].task_count
+            nc = self.tasks[e.consumer].task_count
+            if np_ == 1 and nc == 1:
+                kinds.add("pipeline")
+            elif np_ == 1:
+                kinds.add("fan-out")
+            elif nc == 1:
+                kinds.add("fan-in")
+            elif np_ == nc:
+                kinds.add("NxN")
+            else:
+                kinds.add("MxN")
+        return "+".join(sorted(kinds))
+
+    def __repr__(self) -> str:
+        return (f"<WorkflowGraph tasks={list(self.tasks)} edges={len(self.edges)} "
+                f"topology={self.topology_kind()}>")

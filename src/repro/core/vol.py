@@ -1,0 +1,214 @@
+"""VOL interception layer -- the LowFive analogue.
+
+LowFive is an HDF5 Virtual Object Layer plugin: user task code performs
+ordinary HDF5 I/O, and the plugin redirects it over memory/MPI or files, and
+exposes callback hooks at I/O execution points.  Here the same boundary is
+implemented over ``repro.core.datamodel``: the user task code calls the
+``repro.core.h5`` API (identical standalone and in-workflow); when a workflow
+is active, an ambient ``VOL`` object intercepts opens/closes/reads/writes.
+
+The VOL object carries (mirroring the LowFive API used in the paper's
+Listing 5):
+
+* per-pattern memory/file properties (``set_memory`` / ``set_file``),
+* outgoing and incoming channels (set by the driver, matched data-centrically),
+* callback registry: ``set_before_file_open``, ``set_after_file_open``,
+  ``set_before_file_close``, ``set_after_file_close``,
+  ``set_after_dataset_write``, ``set_before_dataset_open``,
+* ``serve_all()``, ``clear_files()``, ``broadcast_files()``,
+  ``file_close_counter`` -- the exact surface used by the Nyx custom-action
+  script in the paper,
+* flow control is enforced by the channels the files are served into.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .channel import Channel
+from .datamodel import File, match_file
+
+__all__ = ["VOL", "current_vol", "push_vol", "pop_vol"]
+
+_tls = threading.local()
+
+
+def current_vol() -> Optional["VOL"]:
+    return getattr(_tls, "vol_stack", [None])[-1]
+
+
+def push_vol(vol: Optional["VOL"]) -> None:
+    if not hasattr(_tls, "vol_stack"):
+        _tls.vol_stack = [None]
+    _tls.vol_stack.append(vol)
+
+
+def pop_vol() -> None:
+    _tls.vol_stack.pop()
+
+
+class VOL:
+    """Per task-instance interception object (one LowFive plugin instance)."""
+
+    def __init__(self, task: str, instance: int = 0, rank: int = 0, nprocs: int = 1,
+                 io_procs: Optional[int] = None):
+        self.task = task
+        self.instance = instance
+        self.rank = rank
+        self.nprocs = nprocs
+        self.io_procs = io_procs if io_procs is not None else nprocs
+
+        self.outgoing: List[Channel] = []
+        self.incoming: List[Channel] = []
+
+        # (filename_pattern -> mode) properties; "memory" wins by default
+        self._props: Dict[str, str] = {}
+
+        # callback registry (LowFive execution points)
+        self._cb: Dict[str, Optional[Callable[[Any], None]]] = {
+            "before_file_open": None,
+            "after_file_open": None,
+            "before_file_close": None,
+            "after_file_close": None,
+            "after_dataset_write": None,
+            "before_dataset_open": None,
+        }
+
+        self.file_close_counter = 0
+        self.dataset_write_counter = 0
+        self._unserved: List[File] = []
+        self._broadcast_log: List[str] = []
+        self._open_files: Dict[str, File] = {}
+        self.log: List[Tuple[float, str]] = []
+
+    # ------------------------------------------------------------ properties
+    def set_memory(self, filename_pattern: str, dset_pattern: str = "*") -> None:
+        self._props[filename_pattern] = "memory"
+
+    def set_file(self, filename_pattern: str, dset_pattern: str = "*") -> None:
+        self._props[filename_pattern] = "file"
+
+    # ------------------------------------------------------------- callbacks
+    def set_before_file_open(self, cb: Callable[[Any], None]) -> None:
+        self._cb["before_file_open"] = cb
+
+    def set_after_file_open(self, cb: Callable[[Any], None]) -> None:
+        self._cb["after_file_open"] = cb
+
+    def set_before_file_close(self, cb: Callable[[Any], None]) -> None:
+        self._cb["before_file_close"] = cb
+
+    def set_after_file_close(self, cb: Callable[[Any], None]) -> None:
+        self._cb["after_file_close"] = cb
+
+    def set_after_dataset_write(self, cb: Callable[[Any], None]) -> None:
+        self._cb["after_dataset_write"] = cb
+
+    def set_before_dataset_open(self, cb: Callable[[Any], None]) -> None:
+        self._cb["before_dataset_open"] = cb
+
+    def _fire(self, point: str, arg: Any) -> bool:
+        """Fire a callback; returns True if a user callback handled the point."""
+        cb = self._cb[point]
+        if cb is not None:
+            cb(arg)
+            return True
+        return False
+
+    # --------------------------------------------------------- LowFive verbs
+    def serve_all(self, memory: bool = True, file: bool = True) -> int:
+        """Serve every unserved file to all matching outgoing channels.
+
+        Flow control happens inside ``Channel.offer`` -- a skip there is not an
+        error, it is the strategy working as intended.
+        """
+        n = 0
+        for f in list(self._unserved):
+            for ch in self.outgoing:
+                if not ch.matches_file(f.filename):
+                    continue
+                if ch.mode == "memory" and not memory:
+                    continue
+                if ch.mode == "file" and not file:
+                    continue
+                if ch.offer(f):
+                    n += 1
+        return n
+
+    def clear_files(self) -> None:
+        self._unserved.clear()
+
+    def broadcast_files(self) -> None:
+        """Rank-0 metadata broadcast (Nyx idiom). In the single-driver
+        execution model this records the structural copy; per-rank views all
+        share the driver's tree, so the broadcast is a metadata no-op but the
+        event is logged for the custom-action tests."""
+        self._broadcast_log.append(
+            f"bcast@close={self.file_close_counter} files={[f.filename for f in self._unserved]}"
+        )
+
+    # ------------------------------------------------- h5-facing entry points
+    def on_file_create(self, f: File) -> None:
+        self._open_files[f.filename] = f
+
+    def on_file_close(self, f: File) -> None:
+        self._fire("before_file_close", f)
+        self.file_close_counter += 1
+        self._unserved.append(f)
+        self._open_files.pop(f.filename, None)
+        self.log.append((time.monotonic(), f"close:{f.filename}"))
+        if not self._fire("after_file_close", f):
+            # Default behaviour: serve at close, then drop our reference --
+            # exactly LowFive's serve-on-close convention.
+            self.serve_all(True, True)
+            self.clear_files()
+
+    def on_file_open(self, filename: str) -> Optional[File]:
+        """Consumer-side open: pull the next version from a matching channel."""
+        self._fire("before_file_open", filename)
+        chans = [c for c in self.incoming if c.matches_file(filename)]
+        if not chans:
+            return None  # not intercepted -> caller falls back to standalone
+        # A consumer port may aggregate several producer instances (fan-in):
+        # take the next available file, round-robin over its channels.
+        while True:
+            live = [c for c in chans if not c.is_done()]
+            if not live:
+                return None  # all producers report all-done (query protocol)
+            for c in live:
+                if c.peek_pending():
+                    f = c.get(timeout=0.05)
+                    if f is not None:
+                        self._fire("after_file_open", f)
+                        return f
+            # nothing pending: block on the single live channel case,
+            # otherwise poll (multi-producer fan-in).
+            if len(live) == 1:
+                f = live[0].get()
+                if f is None:
+                    return None
+                self._fire("after_file_open", f)
+                return f
+            time.sleep(0.001)
+
+    def on_dataset_write(self, ds) -> None:
+        self.dataset_write_counter += 1
+        self._fire("after_dataset_write", ds)
+
+    def on_dataset_open(self, path: str) -> None:
+        self._fire("before_dataset_open", path)
+
+    # ------------------------------------------------------------- shutdown
+    def finalize(self) -> None:
+        """Task function returned: serve any leftover files, mark all-done."""
+        if self._unserved:
+            self.serve_all(True, True)
+            self.clear_files()
+        for ch in self.outgoing:
+            ch.finish()
+
+    def __repr__(self) -> str:
+        return (f"<VOL task={self.task}[{self.instance}] out={len(self.outgoing)} "
+                f"in={len(self.incoming)} closes={self.file_close_counter}>")

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot spots of the orchestrated workloads:
+
+* ``flash_attention`` -- GQA flash attention forward (MXU tiling, online
+  softmax in VMEM scratch, causal block skipping);
+* ``ssd_scan``        -- Mamba2 SSD intra-chunk quadratic part;
+* ``pack``            -- transport block-gather into contiguous send buffers
+  (scalar-prefetch index-map DMA), the TPU-native analogue of LowFive's
+  serialization path.
+
+Each kernel ships with a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the
+jitted public wrappers (interpret=True on CPU, Mosaic on TPU).
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

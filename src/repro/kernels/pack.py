@@ -1,0 +1,54 @@
+"""Block-gather pack kernel -- the transport serialization hot path.
+
+The M->N redistribution planner (repro.core.redistribute) reduces every
+producer->consumer exchange to "gather these row-blocks of a 2-D buffer into
+one contiguous send buffer".  On TPU the natural implementation is an
+index-map-driven DMA: the block offsets arrive as a *scalar-prefetch* operand
+(pltpu.PrefetchScalarGridSpec), the grid walks output tiles, and each tile's
+``index_map`` points the DMA engine at the right source row -- no gather
+scatter ops, just strided HBM->VMEM->HBM copies.
+
+Tiles are (tile_rows, cols); the planner pads ragged blocks up to tile
+granularity (LowFive ships whole hyperslabs, same idea).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pack_kernel(offs_ref, src_ref, out_ref):
+    out_ref[...] = src_ref[...]
+
+
+def pack_blocks(
+    src: jnp.ndarray,          # (R, C) source buffer
+    tile_offsets: jnp.ndarray,  # (T,) int32: source row-tile index per out tile
+    tile_rows: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Gather T row-tiles of ``tile_rows`` rows each into a contiguous buffer.
+
+    out[t*tile_rows:(t+1)*tile_rows] = src[tile_offsets[t]*tile_rows : ...]
+    """
+    r, c = src.shape
+    t = tile_offsets.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((tile_rows, c), lambda i, offs: (offs[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, c), lambda i, offs: (i, 0)),
+    )
+    return pl.pallas_call(
+        _pack_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t * tile_rows, c), src.dtype),
+        interpret=interpret,
+    )(tile_offsets, src)

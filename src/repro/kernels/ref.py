@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import _sdpa, blockwise_attention  # noqa: F401  (oracle)
+
+
+def flash_attention_ref(q, k, v, causal=True, window=0):
+    """q (B,S,H,D); k/v (B,S,KV,D) -> (B,S,H,D).  Naive softmax attention."""
+    return _sdpa(q, k, v, causal=causal, window=window)
+
+
+def ssd_intra_chunk_ref(x, dA, Bm, Cm):
+    """Reference for kernels.ssd_scan.ssd_intra_chunk (einsum formulation).
+
+    x (B,NC,q,H,P); dA (B,NC,q,H); Bm/Cm (B,NC,q,G,N).
+    Returns (y_diag, states) with the same shapes as the kernel.
+    """
+    b, nc, q, h, p = x.shape
+    g, n = Bm.shape[3], Bm.shape[4]
+    r = h // g
+    xf = x.astype(jnp.float32)
+    dAf = dA.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    cs = jnp.cumsum(dAf, axis=2)                               # (b,nc,q,h)
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]         # (b,nc,i,j,h)
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+
+    scores = jnp.einsum("bcign,bcjgn->bcijg", Cf, Bf)          # (b,nc,i,j,g)
+    xg = xf.reshape(b, nc, q, g, r, p)
+    Lg = L.reshape(b, nc, q, q, g, r)
+    y = jnp.einsum("bcijg,bcijgr,bcjgrp->bcigrp", scores, Lg, xg)
+    y = y.reshape(b, nc, q, h, p)
+
+    decay_last = jnp.exp(cs[:, :, -1:, :] - cs)                # (b,nc,q,h)
+    xw = xf * decay_last[..., None]
+    xwg = xw.reshape(b, nc, q, g, r, p)
+    st = jnp.einsum("bcjgn,bcjgrp->bcgrnp", Bf, xwg).reshape(b, nc, h, n, p)
+    return y, st
+
+
+def pack_blocks_ref(src, tile_offsets, tile_rows=8):
+    """numpy oracle for kernels.pack.pack_blocks."""
+    src = np.asarray(src)
+    out = [src[o * tile_rows:(o + 1) * tile_rows] for o in np.asarray(tile_offsets)]
+    return np.concatenate(out, axis=0)

@@ -1,0 +1,86 @@
+"""SSD (Mamba2) intra-chunk Pallas TPU kernel.
+
+The chunked SSD algorithm splits into (i) an intra-chunk quadratic part --
+attention-like (q x q) einsums, the MXU hot spot -- and (ii) a cheap
+sequential inter-chunk state recurrence.  This kernel computes (i) plus each
+chunk's *state contribution*; the recurrence and the off-diagonal correction
+stay in jnp (``repro.models.ssm``), which XLA fuses fine because they are
+O(S*N*P) not O(S*q).
+
+Grid = (B, NC, H): one program per (batch, chunk, head).  The head axis maps
+to its B/C group via ``index_map`` (h // r), mirroring GQA in the attention
+kernel.  Per-program working set at q=256, N=P=128, f32:
+    x (q,P) + B,C (q,N) + L (q,q) + state (N,P) ~ 0.6 MiB  << VMEM.
+All matmuls are (256,128)x(128,256)-shaped -- MXU-aligned.
+
+Outputs: y_diag (B, NC, q, H, P) and states (B, NC, H, N, P).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dA_ref, b_ref, c_ref, y_ref, st_ref, *, q: int):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)       # (q, P)
+    dA = dA_ref[0, 0, :, 0].astype(jnp.float32)        # (q,)
+    Bm = b_ref[0, 0, :, 0, :].astype(jnp.float32)      # (q, N)
+    Cm = c_ref[0, 0, :, 0, :].astype(jnp.float32)      # (q, N)
+
+    cs = jnp.cumsum(dA)                                # (q,)
+    # L[i,j] = exp(cs[i] - cs[j]) for i >= j else 0   (segment-sum decay)
+    diff = cs[:, None] - cs[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(diff), 0.0)        # (q, q)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (q, q)
+    y = jax.lax.dot((scores * L).astype(x.dtype), x)   # (q, P)
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # chunk state contribution: sum_j B[j]^T (x[j] * exp(cs[-1] - cs[j]))
+    decay_last = jnp.exp(cs[q - 1] - cs)               # (q,)
+    xw = x * decay_last[:, None]
+    st = jax.lax.dot_general(Bm, xw, (((0,), (0,)), ((), ())))      # (N, P)
+    st_ref[0, 0, 0] = st.astype(st_ref.dtype)
+
+
+def ssd_intra_chunk(
+    x: jnp.ndarray,    # (B, NC, q, H, P)   x pre-multiplied by dt
+    dA: jnp.ndarray,   # (B, NC, q, H)
+    Bm: jnp.ndarray,   # (B, NC, q, G, N)
+    Cm: jnp.ndarray,   # (B, NC, q, G, N)
+    interpret: bool = False,
+):
+    """Returns (y_diag (B,NC,q,H,P), states (B,NC,H,N,P))."""
+    b, nc, q, h, p = x.shape
+    g, n = Bm.shape[3], Bm.shape[4]
+    r = h // g
+
+    kernel = functools.partial(_ssd_kernel, q=q)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(b, nc, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda b_, c_, h_: (b_, c_, 0, h_, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda b_, c_, h_: (b_, c_, 0, h_)),
+            pl.BlockSpec((1, 1, q, 1, n),
+                         lambda b_, c_, h_, r=r: (b_, c_, 0, h_ // r, 0)),
+            pl.BlockSpec((1, 1, q, 1, n),
+                         lambda b_, c_, h_, r=r: (b_, c_, 0, h_ // r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, 1, p), lambda b_, c_, h_: (b_, c_, 0, h_, 0)),
+            pl.BlockSpec((1, 1, 1, n, p), lambda b_, c_, h_: (b_, c_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dA, Bm, Cm)
+    return y, st

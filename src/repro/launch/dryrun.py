@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (lower+compile succeeds, no sharding
+    mismatch / unsupported collective),
+  * memory fits (``compiled.memory_analysis()`` bytes-per-device),
+  * and it yields the roofline terms (``cost_analysis()`` flops/bytes +
+    collective bytes parsed from the partitioned HLO).
+
+Results land in ``results/dryrun/<arch>__<shape>__<mesh>[__tag].json`` so the
+roofline benchmark and EXPERIMENTS.md read from one place.  Cells are
+independent -> the grid can be sharded across processes with --arch/--shape.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shapes_for
+from repro.launch import hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import make_cell
+from repro.parallel.sharding import DEFAULT_RULES, SERVE_RULES
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             rules=None, accum_steps: int = 1, tag: str = "",
+             compress_grads: bool = False,
+             cfg_overrides: Optional[dict] = None,
+             variant: Optional[str] = None) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = next(s for s in SHAPES if s.name == shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    n_dev = mesh.devices.size
+
+    t0 = time.monotonic()
+    cell = make_cell(cfg, shape, mesh, rules=rules, accum_steps=accum_steps,
+                     compress_grads=compress_grads)
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     donate_argnums=cell.donate_argnums)
+    lowered = jitted.lower(*cell.args)
+    t_lower = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    t_compile = time.monotonic() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = hlo.collective_bytes(compiled.as_text())
+
+    # analytic per-device flops/bytes (cost_analysis counts while bodies once
+    # -- see hlo.py module docstring); raw numbers recorded below.
+    if mesh_name == "multipod":
+        n_data, n_model = mesh.shape["pod"] * mesh.shape["data"], mesh.shape["model"]
+    else:
+        n_data, n_model = mesh.shape["data"], mesh.shape["model"]
+    if variant == "dp":      # pure DP folds the model axis into data
+        n_data, n_model = n_data * n_model, 1
+    ana = hlo.analytic_stats(cfg, shape, n_data, n_model,
+                             accum_steps=accum_steps)
+    rf = hlo.Roofline(
+        flops=ana["flops"],
+        hbm_bytes=ana["hbm_bytes"],
+        coll_bytes=float(coll.total_bytes),
+        model_flops=hlo.model_flops_per_device(cfg, shape, n_dev),
+    )
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "tag": tag,
+        "n_devices": n_dev,
+        "ok": True,
+        "t_lower_s": t_lower,
+        "t_compile_s": t_compile,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                           + getattr(mem, "temp_size_in_bytes", 0)
+                           + getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "collectives": {
+            "bytes_by_kind": coll.bytes_by_kind,
+            "count_by_kind": coll.count_by_kind,
+        },
+        "roofline": rf.to_dict(),
+        "raw_cost_analysis": {  # while bodies counted once -- see hlo.py
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+    }
+    return out
+
+
+def save_result(res: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    tag = f"__{res['tag']}" if res.get("tag") else ""
+    name = f"{res['arch']}__{res['shape']}__{res['mesh']}{tag}.json"
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--accum-steps", type=int, default=None,
+                    help="grad-accum microbatches for train shapes "
+                         "(default 4: fits the 22-80 layer carry stacks in "
+                         "16 GB/chip HBM)")
+    ap.add_argument("--weight-gather", action="store_true",
+                    help="FSDP weight-gather sharding mode (see "
+                         "parallel/sharding.py) -- the beyond-baseline layout")
+    ap.add_argument("--variant", default=None,
+                    help="named rule variant from parallel.sharding."
+                         "RULE_VARIANTS (wg/sp/dp/serve_wg/serve_repl); "
+                         "becomes the result tag")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--remat", choices=["none", "dots", "full"], default=None,
+                    help="override the config's activation-checkpoint policy")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        cell_shapes = ([s for s in shapes_for(cfg) if s.name == args.shape]
+                       if args.shape else shapes_for(cfg))
+        for shape in cell_shapes:
+            for mesh_name in meshes:
+                tag = f"__{args.tag}" if args.tag else ""
+                path = os.path.join(
+                    RESULTS_DIR, f"{arch}__{shape.name}__{mesh_name}{tag}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {arch} {shape.name} {mesh_name}")
+                    continue
+                accum = args.accum_steps
+                if accum is None:
+                    accum = 4 if shape.kind == "train" else 1
+                rules = None
+                tag = args.tag
+                if args.variant:
+                    from repro.parallel.sharding import RULE_VARIANTS
+                    rules = RULE_VARIANTS[args.variant]
+                    tag = tag or args.variant
+                elif args.weight_gather:
+                    base = DEFAULT_RULES if shape.kind == "train" else SERVE_RULES
+                    rules = base.with_(weight_gather=True)
+                try:
+                    overrides = {"remat": args.remat} if args.remat else None
+                    if args.variant == "moe_a2a":
+                        overrides = dict(overrides or {})
+                        overrides["moe_dispatch"] = "a2a"
+                    res = run_cell(arch, shape.name, mesh_name, tag=tag,
+                                   rules=rules, accum_steps=accum,
+                                   compress_grads=args.compress_grads,
+                                   cfg_overrides=overrides,
+                                   variant=args.variant)
+                    p = save_result(res)
+                    r = res["roofline"]
+                    print(f"[ok] {arch} {shape.name} {mesh_name} "
+                          f"compile={res['t_compile_s']:.1f}s "
+                          f"mem={res['memory']['peak_bytes']/2**30:.2f}GiB "
+                          f"tc={r['t_compute']*1e3:.2f}ms "
+                          f"tm={r['t_memory']*1e3:.2f}ms "
+                          f"tx={r['t_collective']*1e3:.2f}ms "
+                          f"bound={r['bottleneck']} -> {p}")
+                except Exception as e:
+                    failures += 1
+                    print(f"[FAIL] {arch} {shape.name} {mesh_name}: "
+                          f"{type(e).__name__}: {e}")
+                    traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

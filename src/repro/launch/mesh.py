@@ -1,0 +1,41 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") -- the
+leading "pod" axis carries DCN-side data parallelism; "data"/"model" stay
+within a pod's ICI domain.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS for 512 host devices *before* jax init;
+smoke tests and benches see the real single CPU device).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)} "
+            "(dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
+            "=512 before any jax import)")
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(axes: Tuple[str, ...] = ("data",)):
+    """Trivial mesh over whatever devices exist (CPU smoke tests)."""
+    import jax
+
+    devices = np.asarray(jax.devices())
+    shape = (len(devices),) + (1,) * (len(axes) - 1)
+    return jax.sharding.Mesh(devices.reshape(shape), axes)

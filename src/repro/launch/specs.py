@@ -1,0 +1,152 @@
+"""ShapeDtypeStruct stand-ins + step builders for every (arch x shape) cell.
+
+``input_specs(cfg, shape)`` returns the exact abstract inputs the step
+function takes -- weak-type-correct, shardable, never allocated.  ``make_cell``
+packages (step_fn, arg_sds, in_shardings) for the dry-run: train shapes lower
+``train_step``; prefill shapes lower ``prefill``; decode shapes lower one
+``serve_step`` (a single new token against a seq_len KV cache).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import Shape
+from repro.models.registry import get_family
+from repro.parallel.sharding import (DEFAULT_RULES, SERVE_RULES, ShardingRules,
+                                     logical_to_spec, tree_shardings, use_mesh)
+from repro.train.optim import AdamWConfig
+from repro.train.trainer import TrainState, init_state, make_train_step, state_specs
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _batch_axes(mesh, global_batch: int):
+    """Batch logical axes: shard over (pod, data) when divisible, else
+    replicate (long_500k has global_batch=1)."""
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return ("batch",) if global_batch % n == 0 else (None,)
+
+
+def token_specs(cfg, shape: Shape) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": SDS((b, s), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = SDS((b, s), jnp.int32)
+    if cfg.family == "vlm":
+        specs["vision_embeds"] = SDS((b, cfg.vision_tokens, cfg.d_model),
+                                     jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        specs["frames"] = SDS((b, cfg.source_len, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+    return specs
+
+
+def input_specs(cfg, shape: Shape) -> Dict[str, Any]:
+    """All abstract inputs for this cell's step function."""
+    fam = get_family(cfg)
+    out: Dict[str, Any] = {"batch": token_specs(cfg, shape)}
+    if shape.kind == "train":
+        ocfg = AdamWConfig(state_dtype=cfg.opt_state_dtype)
+        out["state"] = jax.eval_shape(
+            lambda: init_state(jax.random.PRNGKey(0), cfg, ocfg))
+    else:
+        out["params"] = jax.eval_shape(
+            lambda: fam.init(jax.random.PRNGKey(0), cfg))
+        max_len = shape.seq_len + (cfg.vision_tokens if cfg.family == "vlm" else 0)
+        out["cache"] = jax.eval_shape(
+            lambda: fam.init_cache(cfg, shape.global_batch, max_len))
+        if shape.kind == "decode":
+            out["token"] = SDS((shape.global_batch, 1), jnp.int32)
+    return out
+
+
+@dataclass
+class Cell:
+    """One lowered-compile unit: fn(*args) with per-arg shardings."""
+    name: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+
+
+def make_cell(cfg, shape: Shape, mesh,
+              rules: Optional[ShardingRules] = None,
+              accum_steps: int = 1,
+              compress_grads: bool = False) -> Cell:
+    fam = get_family(cfg)
+    specs = input_specs(cfg, shape)
+    baxes = _batch_axes(mesh, shape.global_batch)
+    if baxes == (None,) and rules is not None:
+        rules = rules.with_(batch=None)       # replicate tiny batches everywhere
+    elif baxes == (None,):
+        rules = (DEFAULT_RULES if shape.kind == "train" else SERVE_RULES
+                 ).with_(batch=None)
+
+    def batch_shardings(batch_specs):
+        return {
+            k: NamedSharding(mesh, logical_to_spec(
+                baxes + (None,) * (v.ndim - 1), mesh,
+                rules or DEFAULT_RULES))
+            for k, v in batch_specs.items()
+        }
+
+    if shape.kind == "train":
+        r = rules or DEFAULT_RULES
+        step = make_train_step(cfg, accum_steps=accum_steps,
+                               compress_grads=compress_grads)
+
+        def fn(state, batch):
+            with use_mesh(mesh, r):
+                return step(state, batch)
+
+        st_sh = tree_shardings(mesh, state_specs(cfg), r)
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=fn,
+            args=(specs["state"], specs["batch"]),
+            in_shardings=(st_sh, batch_shardings(specs["batch"])),
+            donate_argnums=(0,),
+        )
+
+    r = rules or SERVE_RULES
+    p_sh = tree_shardings(mesh, fam.param_specs(cfg), r)
+    c_sh = tree_shardings(mesh, fam.cache_specs(cfg), r)
+
+    if shape.kind == "prefill":
+        def fn(params, batch, cache):
+            with use_mesh(mesh, r):
+                return fam.prefill(params, cfg, batch, cache)
+
+        return Cell(
+            name=f"{cfg.name}:{shape.name}",
+            fn=fn,
+            args=(specs["params"], specs["batch"], specs["cache"]),
+            in_shardings=(p_sh, batch_shardings(specs["batch"]), c_sh),
+            donate_argnums=(2,),
+        )
+
+    # decode: one new token against a seq_len KV cache
+    def fn(params, token, cache):
+        with use_mesh(mesh, r):
+            return fam.decode_step(params, cfg, token, cache)
+
+    tok_sh = NamedSharding(mesh, logical_to_spec(baxes + (None,), mesh,
+                                                 r))
+    return Cell(
+        name=f"{cfg.name}:{shape.name}",
+        fn=fn,
+        args=(specs["params"], specs["token"], specs["cache"]),
+        in_shardings=(p_sh, tok_sh, c_sh),
+        donate_argnums=(2,),
+    )

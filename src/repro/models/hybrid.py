@@ -1,0 +1,235 @@
+"""Zamba2-style hybrid LM: a Mamba2 backbone with a *shared* attention+MLP
+block applied every ``attn_every`` layers [arXiv:2411.15242].
+
+The shared block's weights are a single set reused at every application
+(Zamba2's parameter-sharing trick), but each application carries its own KV
+state.  The layer stack is executed as a scan over *groups*: each group scans
+``attn_every`` stacked Mamba layers and then applies the shared attention
+block once.  ``n_layers`` must be divisible by ``attn_every``.
+
+Decode uses a ring-buffer sliding-window KV cache of size ``cfg.window`` per
+shared-block application, which keeps the ``long_500k`` decode state O(window)
+instead of O(seq) -- this is why the hybrid arch runs the 500k shape (see
+DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain, weight
+
+from . import layers as L
+from . import ssm as M
+
+Params = Dict[str, Any]
+
+
+def _n_groups(cfg) -> int:
+    k = cfg.attn_every or cfg.n_layers
+    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k
+
+
+# ------------------------------------------------------------------ params
+def init(key, cfg) -> Params:
+    ke, kl, ka, kf = jax.random.split(key, 4)
+    stacked = jax.vmap(lambda k: M._layer_init(k, cfg))(
+        jax.random.split(kl, cfg.n_layers))
+    shared = {
+        "ln1": L.rmsnorm_init(cfg.d_model, jnp.float32),
+        "ln2": L.rmsnorm_init(cfg.d_model, jnp.float32),
+        "attn": L.attention_init(ka, cfg),
+        "ffn": L.swiglu_init(kf, cfg.d_model, cfg.d_ff, cfg.n_layers,
+                             jnp.dtype(cfg.dtype)),
+    }
+    return {"embed": L.embed_init(ke, cfg), "layers": stacked,
+            "shared": shared, "ln_f": L.rmsnorm_init(cfg.d_model, jnp.float32)}
+
+
+def param_specs(cfg) -> Params:
+    lay = {"ln": {"scale": (None,)}, "mamba": M.mamba_specs(cfg)}
+    stacked = jax.tree.map(lambda s: (None,) + tuple(s), lay,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    shared = {
+        "ln1": {"scale": (None,)},
+        "ln2": {"scale": (None,)},
+        "attn": L.attention_specs(cfg),
+        "ffn": L.swiglu_specs(),
+    }
+    return {"embed": L.embed_specs(cfg), "layers": stacked,
+            "shared": shared, "ln_f": {"scale": (None,)}}
+
+
+# ------------------------------------------------------- shared attn (ring)
+def _ring_attend(p: Params, cfg, x, positions, cache):
+    """Shared-block attention.  cache None -> full (windowed) attention;
+    cache {"k","v","pos","len"} with ring buffers of size R -> decode."""
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    q = (x @ weight(p["wq"], ("fsdp", "tensor"))).reshape(b, s, h, hd)
+    k = (x @ weight(p["wk"], ("fsdp", "tensor"))).reshape(b, s, kv, hd)
+    v = (x @ weight(p["wv"], ("fsdp", "tensor"))).reshape(b, s, kv, hd)
+    cos, sin = L.rope_angles(positions, hd, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+
+    if cache is None:
+        out = L.attend(q, k, v, cfg, causal=True, window=cfg.window)
+        return (out.reshape(b, s, h * hd) @ p["wo"]), None
+
+    R = cache["k"].shape[1]
+    idx = cache["len"]                                   # scalar int32
+    if s == 1:
+        slot = jnp.mod(idx, R)
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cache["pos"], positions[0, :1].astype(jnp.int32), (slot,))
+        new_len = idx + 1
+        # valid slots: written (< new_len in ring terms) and within window
+        slots = jnp.arange(R)
+        written = slots < jnp.minimum(new_len, R)
+        qpos = positions[0, 0]
+        in_window = (cpos > qpos - (cfg.window or 10**9)) & (cpos <= qpos)
+        valid = written & in_window
+        qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(b, s, kv, h // kv, hd)
+        scores = jnp.einsum("bqkrd,bskd->bkrqs", qf, ck.astype(jnp.float32))
+        scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkrqs,bskd->bqkrd", probs, cv.astype(jnp.float32))
+        out = out.reshape(b, s, h * hd).astype(x.dtype)
+        new_cache = {"k": ck, "v": cv, "pos": cpos, "len": new_len}
+        return out @ p["wo"], new_cache
+
+    # prefill: run windowed attention over the prompt, stash the tail in ring
+    out = L.attend(q, k, v, cfg, causal=True, window=cfg.window)
+    take = min(R, s)
+    tail_k = k[:, -take:].astype(cache["k"].dtype)
+    tail_v = v[:, -take:].astype(cache["v"].dtype)
+    tail_p = positions[0, -take:].astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache["k"], tail_k, (0, 0, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], tail_v, (0, 0, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"], tail_p, (0,))
+    new_cache = {"k": ck, "v": cv, "pos": cpos,
+                 "len": jnp.asarray(take, jnp.int32)}
+    return (out.reshape(b, s, h * hd) @ p["wo"]), new_cache
+
+
+def _shared_block(p: Params, cfg, h, positions, cache):
+    a, nc = _ring_attend(p["attn"], cfg, L.rmsnorm(p["ln1"], h, cfg.norm_eps),
+                         positions, cache)
+    h = h + constrain(a, ("batch", "seq", "fsdp"))
+    h = h + L.swiglu(p["ffn"], L.rmsnorm(p["ln2"], h, cfg.norm_eps))
+    return h, nc
+
+
+# ----------------------------------------------------------------- forward
+def forward(params, cfg, tokens, positions=None, cache=None):
+    h = L.embed_lookup(params["embed"], tokens)
+    b, s, _ = h.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    ng = _n_groups(cfg)
+    per = cfg.n_layers // ng
+    grouped = jax.tree.map(
+        lambda a: a.reshape((ng, per) + a.shape[1:]), params["layers"])
+
+    def mamba_block(lp, h, lc):
+        o, nc = M.mamba_block(lp["mamba"], cfg,
+                              L.rmsnorm(lp["ln"], h, cfg.norm_eps), lc)
+        return h + o, nc
+
+    if cfg.remat == "full":
+        mamba_block = jax.checkpoint(mamba_block)
+    elif cfg.remat == "dots":
+        mamba_block = jax.checkpoint(
+            mamba_block, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    def group_fn(h, xs):
+        if cache is not None:
+            glp, (gmc, gac) = xs
+        else:
+            glp, gmc, gac = xs, None, None
+
+        def inner(hh, ys):
+            if gmc is not None:
+                lp, lc = ys
+                hh, nc = mamba_block(lp, hh, lc)
+                return hh, nc
+            hh, _ = mamba_block(ys, hh, None)
+            return hh, None
+
+        if gmc is not None:
+            h, new_mc = jax.lax.scan(inner, h, (glp, gmc))
+        else:
+            h, _ = jax.lax.scan(inner, h, glp)
+            new_mc = None
+        h, new_ac = _shared_block(params["shared"], cfg, h, positions, gac)
+        if cache is not None:
+            return h, (new_mc, new_ac)
+        return h, None
+
+    if cache is not None:
+        gm = jax.tree.map(lambda a: a.reshape((ng, per) + a.shape[1:]),
+                          cache["mamba"])
+        h, (new_mc, new_ac) = jax.lax.scan(group_fn, h, (grouped, (gm, cache["attn"])))
+        new_cache = {
+            "mamba": jax.tree.map(
+                lambda a: a.reshape((ng * per,) + a.shape[2:]), new_mc),
+            "attn": new_ac,
+        }
+    else:
+        h, _ = jax.lax.scan(group_fn, h, grouped)
+        new_cache = None
+    return L.rmsnorm(params["ln_f"], h, cfg.norm_eps), new_cache
+
+
+def loss_fn(params, cfg, batch):
+    h, _ = forward(params, cfg, batch["tokens"])
+    return L.chunked_cross_entropy(h, params["embed"], batch["labels"],
+                                   cfg.loss_chunk)
+
+
+# ------------------------------------------------------------------- serve
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    ng = _n_groups(cfg)
+    R = min(max_len, cfg.window) if cfg.window else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "mamba": M.init_cache(cfg, batch, max_len, dtype),
+        "attn": {
+            "k": jnp.zeros((ng, batch, R, cfg.n_kv_heads, hd), dtype),
+            "v": jnp.zeros((ng, batch, R, cfg.n_kv_heads, hd), dtype),
+            "pos": jnp.zeros((ng, R), jnp.int32),
+            "len": jnp.zeros((ng,), jnp.int32),
+        },
+    }
+
+
+def cache_specs(cfg) -> Params:
+    return {
+        "mamba": M.cache_specs(cfg),
+        "attn": {"k": (None, "batch", "kvseq", "kv", None),
+                 "v": (None, "batch", "kvseq", "kv", None),
+                 "pos": (), "len": ()},
+    }
+
+
+def prefill(params, cfg, tokens, cache):
+    h, new_cache = forward(params, cfg, tokens, cache=cache)
+    return L.unembed(params["embed"], h[:, -1:]), new_cache
+
+
+def decode_step(params, cfg, token, cache):
+    b = token.shape[0]
+    pos = jnp.broadcast_to(cache["attn"]["len"][0][None, None], (b, 1)).astype(jnp.int32)
+    h, new_cache = forward(params, cfg, token, positions=pos, cache=cache)
+    return L.unembed(params["embed"], h), new_cache

@@ -1,0 +1,474 @@
+"""Shared neural-net layers: RMSNorm, RoPE, GQA attention, SwiGLU, MoE.
+
+Pure-functional JAX.  Parameters are plain dicts of arrays; every builder has
+a twin ``*_specs`` returning the same tree of *logical* partition specs
+(tuples of logical axis names) consumed by ``repro.parallel.sharding``.
+
+Sharding constraints on activations are applied through
+``repro.parallel.sharding.constrain`` which is a no-op outside a mesh
+context, so the same model code runs on 1 CPU device and on the 512-device
+production mesh.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constrain, weight
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------- norms
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (..., S) int32 -> cos/sin of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D). cos/sin: (B, S, D/2) or (S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention
+def attention_init(key, cfg) -> Params:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    dt = _dtype(cfg)
+    return {
+        "wq": (jax.random.normal(k1, (d, h * hd)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, kv * hd)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, kv * hd)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (h * hd, d)) * (s / math.sqrt(2 * cfg.n_layers))).astype(dt),
+    }
+
+
+def attention_specs(cfg) -> Params:
+    return {
+        "wq": ("fsdp", "tensor"),
+        "wk": ("fsdp", "tensor"),
+        "wv": ("fsdp", "tensor"),
+        "wo": ("tensor", "fsdp"),
+    }
+
+
+def blockwise_attention(q, k, v, causal: bool = True, window: int = 0,
+                        q_chunk: int = 1024, k_chunk: int = 1024):
+    """Pure-jnp flash attention: online-softmax over KV chunks, scan over Q
+    chunks.  O(S * chunk) memory; this is both the long-sequence XLA path and
+    the oracle for the Pallas kernel (kernels/ref.py re-exports it).
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KV, D).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // k_chunk)
+    pad_q = nq * q_chunk - sq
+    pad_k = nk * k_chunk - sk
+    qf = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kf = jnp.pad(k.astype(jnp.float32), ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    scale = 1.0 / math.sqrt(d)
+    qf = qf.reshape(b, nq, q_chunk, kv, rep, d) * scale
+    kf = kf.reshape(b, nk, k_chunk, kv, d)
+    vf = vf.reshape(b, nk, k_chunk, kv, d)
+
+    def q_step(_, qi):
+        qc, qidx = qi  # (b, q_chunk, kv, rep, d), scalar chunk index
+        q_pos = qidx * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            kc, vc, kidx = ki
+            k_pos = kidx * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bqkrd,bskd->bkrqs", qc, kc)
+            mask = k_pos[None, :] < sk
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window:
+                mask = mask & (k_pos[None, :] > (q_pos[:, None] - window))
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bkrqs,bskd->bkrqd", p, vc)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, kv, rep, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, kv, rep, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, kv, rep, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0), jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out
+
+    _, outs = jax.lax.scan(
+        q_step, None, (jnp.moveaxis(qf, 1, 0), jnp.arange(nq)))
+    # outs: (nq, b, kv, rep, q_chunk, d) -> (b, sq, h, d)
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, kv, rep, nq * q_chunk, d)
+    out = out[:, :, :, :sq]
+    out = jnp.moveaxis(out.reshape(b, h, sq, d), 1, 2)
+    return out.astype(q.dtype)
+
+
+def attend(q, k, v, cfg, causal: bool = True, window: int = 0):
+    """Dispatch: Pallas flash kernel / blockwise-XLA / naive by size."""
+    s = q.shape[1]
+    if cfg.use_flash and causal and s > 1:
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(q, k, v, causal=True, window=window)
+    if s > 2 * cfg.attn_chunk:
+        return blockwise_attention(q, k, v, causal=causal, window=window,
+                                   q_chunk=cfg.attn_chunk, k_chunk=cfg.attn_chunk)
+    return _sdpa(q, k, v, causal=causal, window=window)
+
+
+def _sdpa(q, k, v, causal: bool, window: int = 0, q_offset: int = 0):
+    """Reference scaled-dot-product attention with GQA broadcast.
+
+    q: (B, Sq, H, D), k/v: (B, Sk, KV, D). H = KV * rep.
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    qf = q.astype(jnp.float32) / math.sqrt(d)
+    qg = qf.reshape(b, sq, kv, rep, d)
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attention(
+    p: Params,
+    cfg,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    causal: bool = True,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    xattn_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """GQA attention with optional KV cache (decode) or cross-attention KV.
+
+    cache: {"k": (B, S_max, KV, D), "v": ..., "len": scalar int32}; when given,
+    new K/V are scattered at ``len`` and attention runs over the cache.
+    """
+    b, s, d_model = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    q = constrain(x @ weight(p["wq"], ("fsdp", "tensor")),
+                  ("batch", None, "tensor")).reshape(b, s, h, hd)
+    if xattn_kv is not None:
+        k, v = xattn_kv
+    else:
+        k = constrain(x @ weight(p["wk"], ("fsdp", "tensor")),
+                      ("batch", None, "tensor")).reshape(b, s, kv, hd)
+        v = constrain(x @ weight(p["wv"], ("fsdp", "tensor")),
+                      ("batch", None, "tensor")).reshape(b, s, kv, hd)
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None and xattn_kv is None and s == 1:
+        # decode (single token): append at `len`, attend over the whole cache
+        idx = cache["len"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "len": idx + s}
+        smax = ck.shape[1]
+        kpos = jnp.arange(smax)
+        valid = kpos < (idx + s)
+        if cfg.window:
+            valid &= kpos > (idx + s - 1 - cfg.window)
+        qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(b, s, kv, h // kv, hd)
+        scores = jnp.einsum("bqkrd,bskd->bkrqs", qf, ck.astype(jnp.float32))
+        scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkrqs,bskd->bqkrd", probs, cv.astype(jnp.float32))
+        out = out.reshape(b, s, h, hd).astype(x.dtype)
+    else:
+        if cfg.use_flash and xattn_kv is None and causal and s > 1:
+            from repro.kernels import ops as kops
+
+            out = kops.flash_attention(q, k, v, causal=True, window=cfg.window)
+        else:
+            out = _sdpa(q, k, v, causal=causal, window=cfg.window)
+        if cache is not None:  # prefill fills the cache
+            smax = cache["k"].shape[1]
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            new_cache = {"k": ck, "v": cv, "len": jnp.asarray(s, jnp.int32)}
+
+    out = out.reshape(b, s, h * hd)
+    return constrain(out @ weight(p["wo"], ("tensor", "fsdp")),
+                     ("batch", "seq", "fsdp")), new_cache
+
+
+# ----------------------------------------------------------------- SwiGLU
+def swiglu_init(key, d: int, d_ff: int, n_layers: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(d_ff) / math.sqrt(2 * n_layers)
+    return {
+        "gate": (jax.random.normal(k1, (d, d_ff)) * s).astype(dtype),
+        "up": (jax.random.normal(k2, (d, d_ff)) * s).astype(dtype),
+        "down": (jax.random.normal(k3, (d_ff, d)) * so).astype(dtype),
+    }
+
+
+def swiglu_specs() -> Params:
+    return {"gate": ("fsdp", "tensor"), "up": ("fsdp", "tensor"), "down": ("tensor", "fsdp")}
+
+
+def swiglu(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = (jax.nn.silu(x @ weight(p["gate"], ("fsdp", "tensor")))
+         * (x @ weight(p["up"], ("fsdp", "tensor"))))
+    h = constrain(h, ("batch", None, "tensor"))
+    return constrain(h @ weight(p["down"], ("tensor", "fsdp")),
+                     ("batch", "seq", "fsdp"))
+
+
+# -------------------------------------------------------------------- MoE
+def moe_init(key, cfg) -> Params:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_ffn
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.n_layers)
+    dt = _dtype(cfg)
+    return {
+        "router": (jax.random.normal(k1, (d, e)) * s).astype(jnp.float32),
+        "gate": (jax.random.normal(k2, (e, d, f)) * s).astype(dt),
+        "up": (jax.random.normal(k3, (e, d, f)) * s).astype(dt),
+        "down": (jax.random.normal(k4, (e, f, d)) * so).astype(dt),
+    }
+
+
+def moe_specs() -> Params:
+    return {
+        "router": (None, "tensor"),
+        "gate": ("expert", "fsdp", "tensor"),
+        "up": ("expert", "fsdp", "tensor"),
+        "down": ("expert", "tensor", "fsdp"),
+    }
+
+
+def moe_dense(p: Params, cfg, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense-einsum MoE dispatch: every token through every expert, masked.
+
+    Compute scales with n_experts -- used only as the correctness oracle for
+    tiny configs (tests) and as the degenerate path for very small token
+    counts.  Returns (output, aux_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = x.astype(jnp.float32) @ p["router"]               # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    comb = jnp.sum(jax.nn.one_hot(topi, e, dtype=jnp.float32) * topw[..., None], axis=2)
+    aux = _aux_loss(probs, comb, e)
+
+    xe = x.astype(_dtype(cfg))
+    hg = jnp.einsum("bsd,edf->bsef", xe, weight(p["gate"], ("expert", "fsdp", "tensor")))
+    hu = jnp.einsum("bsd,edf->bsef", xe, weight(p["up"], ("expert", "fsdp", "tensor")))
+    h = jax.nn.silu(hg) * hu
+    # contract E and F together so (B,S,E,D) is never materialized
+    h = h * comb.astype(h.dtype)[..., None]
+    out = jnp.einsum("bsef,efd->bsd", h,
+                     weight(p["down"], ("expert", "tensor", "fsdp")))
+    return constrain(out.astype(x.dtype), ("batch", "seq", "fsdp")), aux
+
+
+def _aux_loss(probs, comb, e):
+    density = jnp.mean(comb > 0, axis=tuple(range(comb.ndim - 1)))
+    mean_prob = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return jnp.sum(density * mean_prob) * e
+
+
+def moe(p: Params, cfg, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k routed MoE with sorted grouped dispatch (TPU-native).
+
+    Tokens are replicated k times, sorted by expert id, packed into a static
+    (E, capacity, d) buffer (overflow dropped -- capacity_factor controls
+    headroom), run through batched expert matmuls, and scattered back with
+    their router weights.  FLOPs scale with *active* params (top_k), unlike
+    the dense-einsum oracle.  Returns (output, aux_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n = b * s
+    if cfg.moe_dispatch == "a2a":
+        from .moe_a2a import a2a_available, moe_a2a
+
+        if a2a_available(cfg):  # explicit EP schedule (shard_map collectives)
+            return moe_a2a(p, cfg, x)
+    if cfg.moe_dispatch == "dense" or n * k <= 4 * e:
+        # tiny workloads: the dense-einsum oracle is cheaper than sorting
+        return moe_dense(p, cfg, x)
+    cap = max(1, int(math.ceil(n * k * cfg.capacity_factor / e)))
+
+    xf = x.reshape(n, d)
+    logits = xf.astype(jnp.float32) @ p["router"]              # (n, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                       # (n, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+
+    eid = topi.reshape(n * k)
+    w = topw.reshape(n * k)
+    tok = jnp.arange(n * k, dtype=jnp.int32) // k
+    order = jnp.argsort(eid)                                   # stable
+    eid_s, w_s, tok_s = eid[order], w[order], tok[order]
+
+    counts = jnp.zeros((e,), jnp.int32).at[eid].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(n * k, dtype=jnp.int32) - offsets[eid_s]
+    in_cap = rank < cap
+    rank_c = jnp.where(in_cap, rank, cap)                      # OOB -> dropped
+
+    xs = jnp.take(xf, tok_s, axis=0).astype(_dtype(cfg))
+    buf = jnp.zeros((e, cap, d), _dtype(cfg)).at[eid_s, rank_c].set(
+        xs, mode="drop")
+    buf = constrain(buf, ("expert", None, None))
+
+    hg = jnp.einsum("ecd,edf->ecf", buf, weight(p["gate"], ("expert", "fsdp", "tensor")))
+    hu = jnp.einsum("ecd,edf->ecf", buf, weight(p["up"], ("expert", "fsdp", "tensor")))
+    h = constrain(jax.nn.silu(hg) * hu, ("expert", None, "tensor"))
+    o = jnp.einsum("ecf,efd->ecd", h,
+                   weight(p["down"], ("expert", "tensor", "fsdp")))  # (E, cap, d)
+
+    contrib = o[eid_s, rank_c] * (w_s * in_cap)[:, None].astype(o.dtype)
+    y = jnp.zeros((n, d), jnp.float32).at[tok_s].add(contrib.astype(jnp.float32))
+
+    comb = jnp.sum(jax.nn.one_hot(topi, e, dtype=jnp.float32) * topw[..., None], axis=1)
+    aux = _aux_loss(probs, comb, e)
+    return constrain(y.reshape(b, s, d).astype(x.dtype), ("batch", "seq", "fsdp")), aux
+
+
+# ------------------------------------------------------------- embeddings
+def embed_init(key, cfg) -> Params:
+    dt = _dtype(cfg)
+    v = cfg.padded_vocab  # pad rows are never indexed by labels/tokens
+    p = {
+        "tok": (jax.random.normal(key, (v, cfg.d_model)) * 0.02).astype(dt)
+    }
+    if not cfg.tie_embeddings:
+        p["out"] = (
+            jax.random.normal(jax.random.fold_in(key, 1), (cfg.d_model, v)) * 0.02
+        ).astype(dt)
+    return p
+
+
+def embed_specs(cfg) -> Params:
+    p = {"tok": ("tensor", "fsdp")}
+    if not cfg.tie_embeddings:
+        p["out"] = ("fsdp", "tensor")
+    return p
+
+
+def embed_lookup(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return constrain(jnp.take(p["tok"], tokens, axis=0), ("batch", "seq", "fsdp"))
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    w = (weight(p["out"], ("fsdp", "tensor")) if "out" in p
+         else weight(p["tok"], ("tensor", "fsdp")).T)
+    return constrain(x @ w, ("batch", None, "tensor"))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def chunked_cross_entropy(h: jnp.ndarray, embed_p: Params, labels: jnp.ndarray,
+                          chunk: int = 256) -> jnp.ndarray:
+    """CE loss without materializing (B, S, vocab) logits.
+
+    Scans over sequence chunks; each chunk computes its logits, reduces to
+    (lse - ll), and is discarded.  Peak extra memory is (B, chunk, vocab).
+    """
+    w = (weight(embed_p["out"], ("fsdp", "tensor")) if "out" in embed_p
+         else weight(embed_p["tok"], ("tensor", "fsdp")).T)
+    b, s, d = h.shape
+    if s <= chunk:
+        return cross_entropy(unembed(embed_p, h), labels)
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)))
+    valid = jnp.pad(jnp.ones((b, s), jnp.float32), ((0, 0), (0, pad)))
+    hp = hp.reshape(b, nc, chunk, d)
+    lp = lp.reshape(b, nc, chunk)
+    valid = valid.reshape(b, nc, chunk)
+
+    @jax.checkpoint  # recompute chunk logits in backward: never stack (B,chunk,V)
+    def step(acc, args):
+        hc, lc, vc = args  # (b, chunk, d), (b, chunk), (b, chunk)
+        logits = constrain(hc @ w, ("batch", None, "tensor")).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((lse - ll) * vc), None
+
+    total, _ = jax.lax.scan(
+        step, jnp.zeros((), jnp.float32),
+        (jnp.moveaxis(hp, 1, 0), jnp.moveaxis(lp, 1, 0), jnp.moveaxis(valid, 1, 0)),
+    )
+    return total / (b * s)

@@ -1,0 +1,76 @@
+"""Family dispatch: one uniform surface over all model families.
+
+``get_family(cfg)`` returns a ``Family`` namespace with
+    init, param_specs, loss_fn, init_cache, cache_specs, prefill, decode_step
+so train/serve/launch code is family-agnostic.  VLM and encdec families take
+extra stub-frontend inputs (vision/frame embeddings) through the batch dict.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from . import encdec, hybrid, ssm, transformer
+
+__all__ = ["Family", "get_family"]
+
+
+@dataclass(frozen=True)
+class Family:
+    name: str
+    init: Callable
+    param_specs: Callable
+    loss_fn: Callable
+    init_cache: Callable
+    cache_specs: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def _tfm_prefill(params, cfg, batch, cache):
+    return transformer.prefill(params, cfg, batch["tokens"], cache,
+                               prefix_embeds=batch.get("vision_embeds"))
+
+
+def _ssm_prefill(params, cfg, batch, cache):
+    return ssm.prefill(params, cfg, batch["tokens"], cache)
+
+
+def _hyb_prefill(params, cfg, batch, cache):
+    return hybrid.prefill(params, cfg, batch["tokens"], cache)
+
+
+def _enc_prefill(params, cfg, batch, cache):
+    return encdec.prefill(params, cfg, batch["tokens"], cache,
+                          frames=batch["frames"])
+
+
+_FAMILIES: Dict[str, Family] = {}
+for fam, mod, pre in (
+    ("dense", transformer, _tfm_prefill),
+    ("moe", transformer, _tfm_prefill),
+    ("vlm", transformer, _tfm_prefill),
+    ("ssm", ssm, _ssm_prefill),
+    ("hybrid", hybrid, _hyb_prefill),
+    ("encdec", encdec, _enc_prefill),
+):
+    _FAMILIES[fam] = Family(
+        name=fam,
+        init=mod.init,
+        param_specs=mod.param_specs,
+        loss_fn=mod.loss_fn,
+        init_cache=mod.init_cache,
+        cache_specs=mod.cache_specs,
+        prefill=pre,
+        decode_step=mod.decode_step,
+    )
+
+
+def get_family(cfg) -> Family:
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}") from None

@@ -1,0 +1,311 @@
+"""Mamba2 (SSD -- state-space duality) language model [arXiv:2405.21060].
+
+Implements the chunked SSD algorithm: within-chunk attention-like einsums
+(quadratic in the chunk length only) + an inter-chunk state recurrence, which
+is exactly the block decomposition the paper derives from the duality.  On
+TPU the within-chunk part is the MXU hot spot -- the Pallas kernel
+(`kernels/ssd_scan.py`) tiles it for VMEM; this module is the pure-jnp
+implementation that doubles as the kernel oracle.
+
+Decode is O(1): a (heads, state, head_dim) recurrent state + a small causal
+conv ring buffer -- which is why the SSM archs run the ``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain, weight
+
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- SSD core
+def segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (i >= j)."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (B, S, H, P)  -- already multiplied by dt
+    dA: jnp.ndarray,     # (B, S, H)     -- dt * A (negative)
+    Bm: jnp.ndarray,     # (B, S, G, N)
+    Cm: jnp.ndarray,     # (B, S, G, N)
+    chunk: int = 256,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, N, P)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    r = h // g
+    q = min(chunk, s)
+    nc = -(-s // q)
+    pad = nc * q - s
+
+    def pad3(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
+    xp, dAp, Bp, Cp = pad3(x), pad3(dA), pad3(Bm), pad3(Cm)
+    xp = xp.reshape(b, nc, q, h, p)
+    dAp = dAp.reshape(b, nc, q, h)
+    Bp = Bp.reshape(b, nc, q, g, n)
+    Cp = Cp.reshape(b, nc, q, g, n)
+
+    dA_cs = jnp.cumsum(dAp, axis=2)                      # (b,nc,q,h)
+    # --- intra-chunk (quadratic in q) ---
+    Lmat = jnp.exp(segsum(jnp.moveaxis(dAp, 3, 2)))      # (b,nc,h,q,q)
+    Lmat = jnp.where(jnp.isfinite(Lmat), Lmat, 0.0)
+    scores = jnp.einsum("bcigp,bcjgp->bcgij", Cp, Bp)    # (b,nc,g,q,q) p==n here
+    scores = scores.reshape(b, nc, g, 1, q, q)
+    Lh = Lmat.reshape(b, nc, g, r, q, q)
+    y_diag = jnp.einsum("bcgrij,bcjgrp->bcigrp",
+                        scores * Lh,
+                        xp.reshape(b, nc, q, g, r, p))
+
+    # --- chunk states ---
+    decay_last = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)    # (b,nc,q,h)
+    states = jnp.einsum(
+        "bcjgn,bcjgrp->bcgrnp",
+        Bp,
+        xp.reshape(b, nc, q, g, r, p) * decay_last.reshape(b, nc, q, g, r, 1),
+    )                                                     # (b,nc,g,r,n,p)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])             # (b,nc,h)
+    s0 = (jnp.zeros((b, h, n, p), x.dtype) if initial_state is None
+          else initial_state.astype(x.dtype))
+
+    def scan_fn(prev, inp):
+        st, dec = inp                                      # (b,g,r,n,p), (b,h)
+        decr = dec.reshape(b, g, r, 1, 1)
+        new = prev * decr + st
+        return new, prev                                   # emit state *before* chunk
+
+    states_hr = states
+    final, prevs = jax.lax.scan(
+        scan_fn,
+        s0.reshape(b, g, r, n, p),
+        (jnp.moveaxis(states_hr, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prevs = jnp.moveaxis(prevs, 0, 1)                      # (b,nc,g,r,n,p)
+
+    # --- off-diagonal contribution ---
+    in_decay = jnp.exp(dA_cs)                              # (b,nc,q,h)
+    y_off = jnp.einsum("bcign,bcgrnp->bcigrp", Cp, prevs)
+    y_off = y_off * in_decay.reshape(b, nc, q, g, r, 1)
+
+    y = (y_diag + y_off).reshape(b, nc, q, h, p)
+    y = y.reshape(b, nc * q, h, p)[:, :s]
+    return y, final.reshape(b, h, n, p)
+
+
+def ssd_decode_step(state, x, dA, Bm, Cm):
+    """O(1) recurrent update. state (B,H,N,P); x (B,H,P) pre-multiplied by dt;
+    dA (B,H); Bm/Cm (B,G,N). Returns (y (B,H,P), new_state)."""
+    b, h, n, p = state.shape
+    g = Bm.shape[1]
+    r = h // g
+    dec = jnp.exp(dA)[..., None, None]                     # (B,H,1,1)
+    Bh = jnp.repeat(Bm, r, axis=1)                         # (B,H,N)
+    Ch = jnp.repeat(Cm, r, axis=1)
+    new = state * dec + Bh[..., :, None] * x[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new)
+    return y, new
+
+
+# ------------------------------------------------------------- Mamba block
+def mamba_init(key, cfg) -> Params:
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h, w = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.conv_width
+    conv_dim = di + 2 * g * n
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": (jax.random.normal(k1, (d, 2 * di + 2 * g * n + h)) * s).astype(dt),
+        "conv_w": (jax.random.normal(k2, (w, conv_dim)) * (1.0 / math.sqrt(w))).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": L.rmsnorm_init(di, jnp.float32),
+        "out_proj": (jax.random.normal(k3, (di, d)) * (1.0 / math.sqrt(di))
+                     / math.sqrt(2 * cfg.n_layers)).astype(dt),
+    }
+
+
+def mamba_specs(cfg) -> Params:
+    return {
+        "in_proj": ("fsdp", "tensor"),
+        "conv_w": (None, "tensor"),
+        "conv_b": ("tensor",),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": {"scale": (None,)},
+        "out_proj": ("tensor", "fsdp"),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv, width W. xBC (B,S,C); w (W,C).
+    state: (B, W-1, C) history for decode. Returns (out, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], width - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xfull = jnp.concatenate([pad, xBC], axis=1)            # (B, S+W-1, C)
+    out = sum(xfull[:, i : i + xBC.shape[1]] * w[i] for i in range(width))
+    new_state = xfull[:, -(width - 1):]
+    return jax.nn.silu(out + b), new_state
+
+
+def mamba_block(p: Params, cfg, x: jnp.ndarray,
+                cache: Optional[Params] = None
+                ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x: (B,S,d) -> (B,S,d). cache: {"conv": (B,W-1,C), "ssm": (B,H,N,P)}."""
+    b, s, d = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    pdim = cfg.ssm_head_dim
+
+    zxbcdt = constrain(x @ weight(p["in_proj"], ("fsdp", "tensor")),
+                       ("batch", None, "tensor"))
+    z, xBC, dtp = _split_proj(cfg, zxbcdt)
+    conv_state = cache["conv"] if cache is not None else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+
+    xin = xBC[..., :di].reshape(b, s, h, pdim)
+    Bm = xBC[..., di : di + g * n].reshape(b, s, g, n)
+    Cm = xBC[..., di + g * n :].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                        # (H,)
+    dA = dt * A
+
+    xdt = xin.astype(jnp.float32) * dt[..., None]
+    if cache is not None and s == 1:
+        y, new_ssm = ssd_decode_step(
+            cache["ssm"].astype(jnp.float32), xdt[:, 0], dA[:, 0],
+            Bm[:, 0].astype(jnp.float32), Cm[:, 0].astype(jnp.float32))
+        y = y[:, None]
+    else:
+        init_state = cache["ssm"].astype(jnp.float32) if cache is not None else None
+        if cfg.use_flash:  # route the intra-chunk hot spot through Pallas
+            from repro.kernels import ops as kops
+
+            y, new_ssm = kops.ssd_chunked_pallas(
+                xdt, dA, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                chunk=cfg.ssd_chunk, initial_state=init_state)
+        else:
+            y, new_ssm = ssd_chunked(
+                xdt, dA, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+                chunk=cfg.ssd_chunk, initial_state=init_state)
+
+    y = y + xin.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = constrain(y @ weight(p["out_proj"], ("tensor", "fsdp")),
+                    ("batch", "seq", "fsdp"))
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv.astype(cache["conv"].dtype),
+                     "ssm": new_ssm.astype(cache["ssm"].dtype)}
+    return out, new_cache
+
+
+# ------------------------------------------------------------------- model
+def _layer_init(key, cfg) -> Params:
+    return {"ln": L.rmsnorm_init(cfg.d_model, jnp.float32),
+            "mamba": mamba_init(key, cfg)}
+
+
+def init(key, cfg) -> Params:
+    ke, kl = jax.random.split(key)
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg))(jax.random.split(kl, cfg.n_layers))
+    return {"embed": L.embed_init(ke, cfg), "layers": stacked,
+            "ln_f": L.rmsnorm_init(cfg.d_model, jnp.float32)}
+
+
+def param_specs(cfg) -> Params:
+    lay = {"ln": {"scale": (None,)}, "mamba": mamba_specs(cfg)}
+    stacked = jax.tree.map(lambda s: (None,) + tuple(s), lay,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return {"embed": L.embed_specs(cfg), "layers": stacked,
+            "ln_f": {"scale": (None,)}}
+
+
+def forward(params, cfg, tokens, cache=None):
+    h = L.embed_lookup(params["embed"], tokens)
+
+    def block(lp, h, lc):
+        o, nc = mamba_block(lp["mamba"], cfg, L.rmsnorm(lp["ln"], h, cfg.norm_eps), lc)
+        return h + o, nc
+
+    if cfg.remat == "full":
+        block = jax.checkpoint(block)
+    elif cfg.remat == "dots":
+        block = jax.checkpoint(block, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    def scan_fn(h, xs):
+        if cache is not None:
+            lp, lc = xs
+            h, nc = block(lp, h, lc)
+            return h, nc
+        h, _ = block(xs, h, None)
+        return h, None
+
+    if cache is not None:
+        h, new_cache = jax.lax.scan(scan_fn, h, (params["layers"], cache))
+    else:
+        h, _ = jax.lax.scan(scan_fn, h, params["layers"])
+        new_cache = None
+    return L.rmsnorm(params["ln_f"], h, cfg.norm_eps), new_cache
+
+
+def loss_fn(params, cfg, batch):
+    h, _ = forward(params, cfg, batch["tokens"])
+    return L.chunked_cross_entropy(h, params["embed"], batch["labels"], cfg.loss_chunk)
+
+
+def init_cache(cfg, batch: int, max_len: int = 0, dtype=jnp.bfloat16) -> Params:
+    """SSM cache is O(1) in sequence length (max_len unused -- API parity)."""
+    di, g, n = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    conv_dim = di + 2 * g * n
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads, n, cfg.ssm_head_dim),
+                         jnp.float32),
+    }
+
+
+def cache_specs(cfg) -> Params:
+    return {"conv": (None, "batch", None, "tensor"),
+            "ssm": (None, "batch", "tensor", None, None)}
+
+
+def prefill(params, cfg, tokens, cache):
+    h, new_cache = forward(params, cfg, tokens, cache=cache)
+    return L.unembed(params["embed"], h[:, -1:]), new_cache
+
+
+def decode_step(params, cfg, token, cache):
+    h, new_cache = forward(params, cfg, token, cache=cache)
+    return L.unembed(params["embed"], h), new_cache

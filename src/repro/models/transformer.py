@@ -1,0 +1,200 @@
+"""Decoder-only transformer LM: dense, MoE (incl. dense-residual / Arctic
+style), and VLM (precomputed patch-embedding prefix) families.
+
+Layers are stacked along a leading axis and driven by ``jax.lax.scan`` so the
+compiled HLO is one layer deep regardless of depth -- essential for the
+40-cell x 2-mesh dry-run grid on a single-core host, and standard practice on
+real TPU pods (MaxText does the same).
+
+Public surface (used by registry/train/serve):
+    init(key, cfg)                      -> params
+    param_specs(cfg)                    -> logical partition-spec tree
+    forward(params, cfg, tokens, ...)   -> (hidden, aux, new_cache)
+    loss_fn(params, cfg, batch)         -> scalar loss
+    init_cache(cfg, b, max_len)         -> stacked KV cache
+    prefill / decode_step
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ params
+def _layer_init(key, cfg) -> Params:
+    ka, kf, km = jax.random.split(key, 3)
+    p: Params = {
+        "ln1": L.rmsnorm_init(cfg.d_model, jnp.float32),
+        "ln2": L.rmsnorm_init(cfg.d_model, jnp.float32),
+        "attn": L.attention_init(ka, cfg),
+    }
+    if cfg.family == "moe" or (cfg.family == "hybrid" and cfg.n_experts):
+        p["moe"] = L.moe_init(km, cfg)
+        if cfg.dense_residual:
+            p["ffn"] = L.swiglu_init(kf, cfg.d_model, cfg.d_ff, cfg.n_layers,
+                                     jnp.dtype(cfg.dtype))
+    else:
+        p["ffn"] = L.swiglu_init(kf, cfg.d_model, cfg.d_ff, cfg.n_layers,
+                                 jnp.dtype(cfg.dtype))
+    return p
+
+
+def _layer_specs(cfg) -> Params:
+    p: Params = {
+        "ln1": {"scale": (None,)},
+        "ln2": {"scale": (None,)},
+        "attn": L.attention_specs(cfg),
+    }
+    if cfg.family == "moe":
+        p["moe"] = L.moe_specs()
+        if cfg.dense_residual:
+            p["ffn"] = L.swiglu_specs()
+    else:
+        p["ffn"] = L.swiglu_specs()
+    return p
+
+
+def init(key, cfg) -> Params:
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    return {
+        "embed": L.embed_init(ke, cfg),
+        "layers": stacked,
+        "ln_f": L.rmsnorm_init(cfg.d_model, jnp.float32),
+    }
+
+
+def param_specs(cfg) -> Params:
+    lay = _layer_specs(cfg)
+    stacked = jax.tree.map(
+        lambda spec: (None,) + tuple(spec),
+        lay,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    return {
+        "embed": L.embed_specs(cfg),
+        "layers": stacked,
+        "ln_f": {"scale": (None,)},
+    }
+
+
+# ----------------------------------------------------------------- forward
+def _block(p: Params, cfg, h, positions, cache, causal=True):
+    a, new_cache = L.attention(p["attn"], cfg, L.rmsnorm(p["ln1"], h, cfg.norm_eps),
+                               positions, causal=causal, cache=cache)
+    h = h + a
+    x2 = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        mo, aux = L.moe(p["moe"], cfg, x2)
+        h = h + mo
+        if "ffn" in p:  # arctic dense residual, parallel branch
+            h = h + L.swiglu(p["ffn"], x2)
+    else:
+        h = h + L.swiglu(p["ffn"], x2)
+    return h, aux, new_cache
+
+
+def forward(
+    params: Params,
+    cfg,
+    tokens: jnp.ndarray,
+    positions: Optional[jnp.ndarray] = None,
+    prefix_embeds: Optional[jnp.ndarray] = None,
+    cache: Optional[Params] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Params]]:
+    """Returns (hidden (B,S,d) after final norm, aux_loss, new_cache)."""
+    h = L.embed_lookup(params["embed"], tokens)
+    if prefix_embeds is not None:  # VLM: prepend vision tokens
+        h = jnp.concatenate([prefix_embeds.astype(h.dtype), h], axis=1)
+    b, s, _ = h.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def block(lp, h, lc):
+        return _block(lp, cfg, h, positions, lc)
+
+    if cfg.remat == "full":
+        block = jax.checkpoint(block)
+    elif cfg.remat == "dots":
+        block = jax.checkpoint(block, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    def scan_fn(carry, xs):
+        h = carry
+        if cache is not None:
+            lp, lc = xs
+            h, aux, nc = block(lp, h, lc)
+            return h, (aux, nc)
+        h, aux, _ = block(xs, h, None)
+        return h, aux
+
+    if cache is not None:
+        h, (auxs, new_cache) = jax.lax.scan(scan_fn, h, (params["layers"], cache))
+    else:
+        h, auxs = jax.lax.scan(scan_fn, h, params["layers"])
+        new_cache = None
+    h = L.rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    return h, jnp.sum(auxs), new_cache
+
+
+# -------------------------------------------------------------------- train
+def loss_fn(params: Params, cfg, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """batch: tokens (B,S), labels (B,S) [, vision_embeds (B,V,d)]."""
+    prefix = batch.get("vision_embeds")
+    h, aux, _ = forward(params, cfg, batch["tokens"], prefix_embeds=prefix)
+    if prefix is not None:
+        h = h[:, prefix.shape[1]:]  # loss on text positions only
+    loss = L.chunked_cross_entropy(h, params["embed"], batch["labels"],
+                                   cfg.loss_chunk)
+    return loss + 0.01 * aux
+
+
+# -------------------------------------------------------------------- serve
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> Params:
+    hd = cfg.resolved_head_dim
+    kv = cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, kv, hd), dtype),
+        "len": jnp.zeros((cfg.n_layers,), jnp.int32),
+    }
+
+
+def cache_specs(cfg) -> Params:
+    return {
+        "k": (None, "batch", "kvseq", "kv", None),
+        "v": (None, "batch", "kvseq", "kv", None),
+        "len": (),
+    }
+
+
+def prefill(params: Params, cfg, tokens: jnp.ndarray, cache: Params,
+            prefix_embeds: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Run the full prompt, fill the cache, return last-token logits."""
+    h, _, new_cache = forward(params, cfg, tokens,
+                              prefix_embeds=prefix_embeds, cache=cache)
+    logits = L.unembed(params["embed"], h[:, -1:])
+    return logits, new_cache
+
+
+def decode_step(params: Params, cfg, token: jnp.ndarray, cache: Params
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step: token (B,1) + cache -> (logits (B,1,V), new cache)."""
+    b = token.shape[0]
+    pos = jnp.broadcast_to(cache["len"][0][None, None], (b, 1)).astype(jnp.int32)
+    h, _, new_cache = forward(params, cfg, token, positions=pos, cache=cache)
+    logits = L.unembed(params["embed"], h)
+    return logits, new_cache

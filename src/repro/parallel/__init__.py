@@ -1,0 +1,23 @@
+from .sharding import (
+    ShardingRules,
+    DEFAULT_RULES,
+    SERVE_RULES,
+    use_mesh,
+    current_mesh,
+    constrain,
+    logical_to_spec,
+    mesh_sharding,
+    tree_shardings,
+)
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "SERVE_RULES",
+    "use_mesh",
+    "current_mesh",
+    "constrain",
+    "logical_to_spec",
+    "mesh_sharding",
+    "tree_shardings",
+]

@@ -1,0 +1,232 @@
+"""Logical-axis sharding: one model codebase, any mesh.
+
+Model code annotates activations/params with *logical* axis names
+("batch", "fsdp", "tensor", "expert", "seq").  A ``ShardingRules`` table maps
+logical names to mesh axis names; ``use_mesh`` installs a mesh + rules
+ambiently so the same model code runs unsharded on 1 CPU device and fully
+sharded on the (2, 16, 16) production mesh.
+
+Baseline rules (paper-faithful data/tensor layout):
+    batch  -> (pod, data)     fsdp   -> (pod, data)
+    tensor -> model           expert -> model        seq -> unsharded
+The §Perf hillclimb swaps rule tables (e.g. sequence-parallel maps
+seq -> model), never model code.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "SERVE_RULES",
+    "use_mesh",
+    "current_mesh",
+    "current_rules",
+    "constrain",
+    "logical_to_spec",
+    "mesh_sharding",
+    "tree_shardings",
+]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Tuple[Tuple[str, MeshAxes], ...] = (
+        ("batch", ("pod", "data")),
+        ("fsdp", ("pod", "data")),
+        ("tensor", "model"),
+        ("expert", "model"),
+        ("seq", None),
+        ("kv", None),
+        ("kvseq", None),
+    )
+    # FSDP weight gathering: when True, model code re-constrains each weight
+    # to be *replicated over the fsdp axes* right before use, so GSPMD
+    # all-gathers the (small) weight instead of all-reducing the (huge)
+    # partial-sum activations it otherwise produces by contracting over the
+    # fsdp-sharded dim.  Off in the paper-faithful baseline; the §Perf
+    # hillclimb turns it on.
+    weight_gather: bool = False
+
+    def lookup(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        for k, v in self.rules:
+            if k == logical:
+                return v
+        return None
+
+    def with_(self, weight_gather: Optional[bool] = None,
+              **kw: MeshAxes) -> "ShardingRules":
+        d = dict(self.rules)
+        d.update(kw)
+        wg = self.weight_gather if weight_gather is None else weight_gather
+        return ShardingRules(tuple(d.items()), weight_gather=wg)
+
+
+DEFAULT_RULES = ShardingRules()
+
+# Serving layout: KV caches are *sequence*-sharded over the model axis
+# (context parallelism) -- kv-head counts (8) don't divide the 16-way model
+# axis, cache length always does.  Weights keep the fsdp x tensor layout.
+SERVE_RULES = DEFAULT_RULES.with_(kvseq="model")
+
+# Named rule tables for the §Perf hillclimb.  Model code never changes --
+# each variant is one swap of the logical->mesh mapping (+ weight gathering).
+RULE_VARIANTS: Dict[str, ShardingRules] = {
+    # paper-faithful baselines
+    "baseline": DEFAULT_RULES,
+    "serve_baseline": SERVE_RULES,
+    # FSDP weight gathering: all-gather weights instead of all-reducing
+    # partial-sum activations when contracting over the fsdp-sharded dim
+    "wg": DEFAULT_RULES.with_(weight_gather=True),
+    "serve_wg": SERVE_RULES.with_(weight_gather=True),
+    # + sequence parallelism: residual-stream activations sharded over the
+    # model axis between TP regions (all-reduce -> reduce-scatter+all-gather)
+    "sp": DEFAULT_RULES.with_(weight_gather=True, seq="model"),
+    # pure data parallelism over all 256/512 chips (small models): no tensor
+    # axis -> the per-layer TP activation all-reduces disappear entirely;
+    # params stay fully sharded (ZeRO-3) and are gathered per use
+    "dp": DEFAULT_RULES.with_(
+        weight_gather=True,
+        batch=("pod", "data", "model"),
+        fsdp=("pod", "data", "model"),
+        tensor=None, expert=None),
+    # decode with weights replicated over the data axis (no per-token weight
+    # all-gather; TP only) -- the standard inference layout when they fit
+    "serve_repl": SERVE_RULES.with_(fsdp=None),
+    # MoE expert parallelism: experts sharded over the model axis, the expert
+    # FFN dim over data (so no contraction dim of the expert matmuls is
+    # sharded), dense/attention weights TP'd over data.  Tokens move to
+    # experts (all-to-all-sized traffic) instead of expert weights moving to
+    # tokens -- the Megatron-MoE layout.
+    "moe_ep": DEFAULT_RULES.with_(
+        weight_gather=True, fsdp=None, tensor="data", expert="model"),
+    # same layout, but the dispatch itself runs through the explicit
+    # shard_map schedule (models/moe_a2a.py) instead of einsum+GSPMD
+    "moe_a2a": DEFAULT_RULES.with_(
+        weight_gather=True, fsdp=None, tensor="data", expert="model"),
+}
+
+_state = threading.local()
+
+
+def _ctx() -> Tuple[Optional[Mesh], ShardingRules]:
+    return getattr(_state, "mesh", None), getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: ShardingRules = DEFAULT_RULES):
+    """Install mesh+rules ambiently (and as the JAX mesh context)."""
+    prev = _ctx()
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ctx()[0]
+
+
+def current_rules() -> Optional[ShardingRules]:
+    mesh, rules = _ctx()
+    return rules if mesh is not None else None
+
+
+def _filter_axes(mesh: Mesh, axes: MeshAxes) -> MeshAxes:
+    """Drop mesh-axis names not present in this mesh (pod on single-pod)."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]],
+                    mesh: Optional[Mesh] = None,
+                    rules: Optional[ShardingRules] = None) -> P:
+    m, r = _ctx()
+    mesh = mesh or m
+    rules = rules or r
+    parts = []
+    used: set = set()
+    for ax in logical_axes:
+        mapped = rules.lookup(ax)
+        if mesh is not None:
+            mapped = _filter_axes(mesh, mapped)
+        # an axis name may appear only once in a PartitionSpec
+        if mapped is not None:
+            flat = (mapped,) if isinstance(mapped, str) else mapped
+            if any(a in used for a in flat):
+                mapped = None
+            else:
+                used.update(flat)
+        parts.append(mapped)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint under the ambient mesh; no-op without one."""
+    mesh, rules = _ctx()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical_axes, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def weight(x: jax.Array, logical_axes: Sequence[Optional[str]]) -> jax.Array:
+    """Weight access point: under ``weight_gather`` rules, re-constrain the
+    weight to be replicated over its fsdp axes (GSPMD inserts a weight
+    all-gather; grads come back as reduce-scatter) -- proper FSDP semantics.
+    Otherwise identity."""
+    mesh, rules = _ctx()
+    if mesh is None or not rules.weight_gather:
+        return x
+    axes = tuple(None if a == "fsdp" else a for a in logical_axes)
+    return constrain(x, axes)
+
+
+def mesh_sharding(mesh: Mesh, logical_axes: Sequence[Optional[str]],
+                  rules: ShardingRules = DEFAULT_RULES) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(logical_axes, mesh, rules))
+
+
+def tree_shardings(mesh: Mesh, logical_tree: Any,
+                   rules: ShardingRules = DEFAULT_RULES) -> Any:
+    """Map a pytree of logical-axis tuples to NamedShardings.
+
+    Leaves are tuples of logical axis names (or None).  A leaf that is a
+    tuple-of-strings/None is treated as the spec for one array.
+    """
+
+    def is_leaf(x):
+        return x is None or (
+            isinstance(x, tuple)
+            and all(e is None or isinstance(e, str) for e in x)
+        )
+
+    def conv(leaf):
+        if leaf is None:
+            return NamedSharding(mesh, P())
+        return mesh_sharding(mesh, leaf, rules)
+
+    return jax.tree.map(conv, logical_tree, is_leaf=is_leaf)

@@ -1,0 +1,140 @@
+"""Batched serving engine: slot-based continuous batching over a static
+KV-cache, greedy/temperature sampling, family-agnostic.
+
+Serving steps (``prefill`` fills slot caches from a prompt; ``decode`` emits
+one token for every live slot) are jitted once per shape.  Requests are
+admitted into free slots as they arrive -- a decode step always runs the full
+slot batch, finished slots are masked.  This is continuous batching in the
+static-shape style TPUs require (no dynamic shapes; occupancy is a mask).
+
+The engine is also a Wilkins *task*: ``examples/serve_inflight.py`` couples a
+trainer producing checkpoints to this engine consuming them in situ (weight
+hot-swap at file granularity, flow control ``latest`` -- the freshest weights
+win, old checkpoints are dropped).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import get_family
+
+__all__ = ["Request", "ServeConfig", "Engine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0     # 0 = greedy
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_slots: int = 8
+    max_len: int = 512
+    cache_dtype: str = "bfloat16"
+
+
+class Engine:
+    def __init__(self, cfg, serve_cfg: ServeConfig, params=None, key=None):
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        self.fam = get_family(cfg)
+        if params is None:
+            params = self.fam.init(
+                key if key is not None else jax.random.PRNGKey(0), cfg)
+        self.params = params
+        self._caches = [None] * serve_cfg.max_slots
+        self._slot_req: List[Optional[Request]] = [None] * serve_cfg.max_slots
+        self._queue: List[Request] = []
+        self._decode_jit = jax.jit(
+            lambda p, tok, cache: self.fam.decode_step(p, self.cfg, tok, cache))
+        self._rng = np.random.default_rng(0)
+
+    # ------------------------------------------------------------- weights
+    def swap_params(self, params) -> None:
+        """Hot-swap weights (in-situ checkpoint consumption)."""
+        self.params = params
+
+    # ------------------------------------------------------------- requests
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.monotonic()
+        self._queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.scfg.max_slots):
+            if self._slot_req[slot] is None and self._queue:
+                req = self._queue.pop(0)
+                self._slot_req[slot] = req
+                cache = self.fam.init_cache(
+                    self.cfg, 1, self.scfg.max_len,
+                    dtype=jnp.dtype(self.scfg.cache_dtype))
+                batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+                if self.cfg.family == "vlm":
+                    batch["vision_embeds"] = jnp.zeros(
+                        (1, self.cfg.vision_tokens, self.cfg.d_model),
+                        jnp.dtype(self.cfg.dtype))
+                if self.cfg.family == "encdec":
+                    batch["frames"] = jnp.zeros(
+                        (1, self.cfg.source_len, self.cfg.d_model),
+                        jnp.dtype(self.cfg.dtype))
+                logits, cache = self.fam.prefill(self.params, self.cfg, batch, cache)
+                tok = self._sample(logits[:, -1], req.temperature)
+                req.out_tokens.append(int(tok[0]))
+                req.t_first = time.monotonic()
+                self._caches[slot] = (cache, tok)
+
+    def _sample(self, logits: jnp.ndarray, temperature: float) -> np.ndarray:
+        logits = np.asarray(logits, np.float32)
+        if temperature <= 0:
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        z = logits / temperature
+        z = z - z.max(axis=-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(axis=-1, keepdims=True)
+        return np.array(
+            [self._rng.choice(p.shape[-1], p=row) for row in p], np.int32)
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> int:
+        """Admit waiting requests, run one decode step for live slots.
+        Returns the number of live slots."""
+        self._admit()
+        live = 0
+        for slot, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            cache, tok = self._caches[slot]
+            logits, cache = self._decode_jit(
+                self.params, tok.reshape(1, 1).astype(jnp.int32), cache)
+            nxt = self._sample(np.asarray(logits)[:, -1], req.temperature)
+            req.out_tokens.append(int(nxt[0]))
+            self._caches[slot] = (cache, jnp.asarray(nxt))
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                req.t_done = time.monotonic()
+                self._slot_req[slot] = None
+                self._caches[slot] = None
+            else:
+                live += 1
+        return live + sum(1 for r in self._queue)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self._queue:
+                return
+        raise RuntimeError("serve loop did not drain")

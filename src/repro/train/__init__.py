@@ -1,0 +1,11 @@
+from .checkpoint import AsyncCheckpointer, load_pytree, restore_latest, save_pytree
+from .data import DataConfig, Prefetcher, SyntheticCorpus, make_batch_iter
+from .optim import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from .trainer import TrainState, init_state, make_train_step, state_specs
+
+__all__ = [
+    "AsyncCheckpointer", "load_pytree", "restore_latest", "save_pytree",
+    "DataConfig", "Prefetcher", "SyntheticCorpus", "make_batch_iter",
+    "AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+    "TrainState", "init_state", "make_train_step", "state_specs",
+]

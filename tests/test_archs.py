@@ -1,0 +1,167 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs; decode-vs-forward consistency per family."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shapes_for
+from repro.models.registry import get_family
+from repro.train import AdamWConfig, init_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=16):
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.vision_tokens, cfg.d_model)) * 0.02,
+            jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.source_len, cfg.d_model)) * 0.02,
+            jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10,
+                       state_dtype=cfg.opt_state_dtype)
+    state = init_state(KEY, cfg, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    batch = _batch(cfg)
+    state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    assert int(state.opt.step) == 1
+    # params updated and finite
+    flat = jax.tree.leaves(state.params)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in flat)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_decode(arch):
+    cfg = get_config(arch, reduced=True)
+    fam = get_family(cfg)
+    params = fam.init(KEY, cfg)
+    b, s, max_len = 2, 8, 32
+    batch = _batch(cfg, b, s)
+    cache = fam.init_cache(cfg, b, max_len, dtype=jnp.float32)
+    logits, cache = fam.prefill(params, cfg, batch, cache)
+    assert logits.shape == (b, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None].astype(jnp.int32)
+    logits2, cache = fam.decode_step(params, cfg, tok, cache)
+    assert logits2.shape == (b, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+@pytest.mark.parametrize("family,arch", [
+    ("dense", "tinyllama-1.1b"),
+    ("ssm", "mamba2-2.7b"),
+    ("hybrid", "zamba2-2.7b"),
+])
+def test_decode_matches_forward(family, arch):
+    """prefill(t0..tk) + decode(t_{k+1}) == forward(t0..t_{k+1}) last logits."""
+    cfg = get_config(arch, reduced=True)
+    fam = get_family(cfg)
+    params = fam.init(KEY, cfg)
+    rng = np.random.default_rng(1)
+    b, s = 1, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+
+    # full forward logits at the last position
+    if family == "dense":
+        from repro.models import transformer as M
+        h, _, _ = M.forward(params, cfg, toks)
+        from repro.models import layers as L
+        full = L.unembed(params["embed"], h[:, -1:])
+    elif family == "ssm":
+        from repro.models import ssm as M
+        h, _ = M.forward(params, cfg, toks)
+        from repro.models import layers as L
+        full = L.unembed(params["embed"], h[:, -1:])
+    else:
+        from repro.models import hybrid as M
+        h, _ = M.forward(params, cfg, toks)
+        from repro.models import layers as L
+        full = L.unembed(params["embed"], h[:, -1:])
+
+    # prefill on the prefix, then decode the last token
+    cache = fam.init_cache(cfg, b, 32, dtype=jnp.float32)
+    _, cache = fam.prefill(params, cfg, {"tokens": toks[:, :-1]}, cache)
+    dec, _ = fam.decode_step(params, cfg, toks[:, -1:], cache)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_moe_sorted_matches_dense_oracle():
+    """Grouped-dispatch MoE == dense-einsum oracle at high capacity."""
+    from repro.models import layers as L
+
+    cfg = get_config("phi3.5-moe-42b-a6.6b", reduced=True).replace(
+        capacity_factor=8.0)  # no drops -> paths must agree exactly
+    p = L.moe_init(KEY, cfg)
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(2, 33, cfg.d_model)),
+                    jnp.float32) * 0.1
+    out_d, aux_d = L.moe_dense(p, cfg, x)
+    out_s, aux_s = L.moe(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_d),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(float(aux_s), float(aux_d), rtol=1e-5)
+
+
+def test_arctic_dense_residual_present():
+    cfg = get_config("arctic-480b", reduced=True)
+    fam = get_family(cfg)
+    p = fam.init(KEY, cfg)
+    assert "moe" in jax.tree_util.tree_structure(p["layers"]).unflatten(
+        jax.tree.leaves(p["layers"]))
+    assert "ffn" in p["layers"]  # dense residual branch
+
+
+def test_param_counts_match_names():
+    """Full configs land in the ballpark their names claim."""
+    expect = {
+        "arctic-480b": (430e9, 530e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        "llama3.2-3b": (3.0e9, 4.2e9),
+        "deepseek-coder-33b": (30e9, 36e9),
+        "tinyllama-1.1b": (0.9e9, 1.3e9),
+        "phi3-mini-3.8b": (3.4e9, 4.2e9),
+        "mamba2-2.7b": (2.4e9, 3.1e9),
+        "internvl2-76b": (65e9, 80e9),
+        "zamba2-2.7b": (2.1e9, 3.1e9),
+        "whisper-base": (0.05e9, 0.16e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n / 1e9:.2f}B not in [{lo / 1e9}, {hi / 1e9}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    a = cfg.active_param_count()
+    assert 5.5e9 <= a <= 7.5e9  # the name says a6.6b
+
+
+def test_shape_grid_applicability():
+    long_runners = {a for a in ARCH_IDS
+                    if any(s.name == "long_500k" for s in shapes_for(get_config(a)))}
+    assert long_runners == {"mamba2-2.7b", "zamba2-2.7b"}
+    for a in ARCH_IDS:
+        names = [s.name for s in shapes_for(get_config(a))]
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(names)
+
+
+def test_padded_vocab():
+    cfg = get_config("mamba2-2.7b")
+    assert cfg.padded_vocab % 256 == 0 and cfg.padded_vocab >= cfg.vocab
+    cfg2 = get_config("whisper-base")
+    assert cfg2.padded_vocab % 256 == 0

@@ -1,0 +1,85 @@
+"""HDF5-style data model: tree ops, hyperslabs, container I/O, glob match."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.datamodel import (BlockOwnership, Dataset, File, Group,
+                                  match_file, match_path)
+
+
+def test_tree_and_paths():
+    f = File("a.h5")
+    ds = f.create_dataset("/g1/g2/data", data=np.ones((4, 5)))
+    assert ds.path == "/g1/g2/data"
+    assert f["/g1/g2/data"] is ds
+    assert "/g1/g2" in f and "/g1/zzz" not in f
+    assert isinstance(f["/g1"], Group)
+    with pytest.raises(KeyError):
+        f["/nope"]
+
+
+def test_hyperslab_read_write():
+    f = File("a.h5")
+    ds = f.create_dataset("/d", shape=(8, 8), dtype=np.float32)
+    block = np.arange(6, dtype=np.float32).reshape(2, 3)
+    ds.write_slab((2, 4), block)
+    np.testing.assert_array_equal(ds.select((2, 4), (2, 3)), block)
+    assert ds.nbytes == 8 * 8 * 4
+
+
+def test_container_roundtrip(tmp_path):
+    f = File("snap.h5")
+    d1 = f.create_dataset("/grid", data=np.arange(100, dtype=np.uint64))
+    d1.attrs["timestep"] = 3
+    own = BlockOwnership()
+    own.add(0, (0,), (50,))
+    own.add(1, (50,), (50,))
+    d1.ownership = own
+    f.create_dataset("/p/pos", data=np.ones((10, 3), np.float32))
+
+    path = f.save(str(tmp_path))
+    g = File.load(path)
+    np.testing.assert_array_equal(g["/grid"][:], np.arange(100, dtype=np.uint64))
+    assert g["/grid"].attrs["timestep"] == 3
+    assert g["/grid"].ownership.blocks[1] == ((50,), (50,))
+    assert g.total_bytes() == f.total_bytes()
+
+
+def test_copy_meta_only():
+    f = File("x.h5")
+    f.create_dataset("/a/b", data=np.ones((4,)))
+    m = f.copy_meta_only()
+    assert m["/a/b"].shape == (4,)
+    # structural copy: data buffers are fresh
+    assert not np.shares_memory(m["/a/b"].read_direct(), f["/a/b"].read_direct())
+
+
+@pytest.mark.parametrize("pattern,path,want", [
+    ("/group1/grid", "/group1/grid", True),
+    ("/group1/*", "/group1/grid", True),
+    ("/particles/*", "/particles/pos/value", True),   # prefix semantics
+    ("/group1/grid", "/group1/particles", False),
+    ("/group1", "/group1/grid", True),                # group names subtree
+    ("*", "/anything", True),
+])
+def test_match_path(pattern, path, want):
+    assert match_path(pattern, path) is want
+
+
+@pytest.mark.parametrize("pattern,name,want", [
+    ("outfile.h5", "outfile.h5", True),
+    ("*.h5", "outfile.h5", True),
+    ("plt*.h5", "plt00010.h5", True),
+    ("plt*.h5", "out.h5", False),
+])
+def test_match_file(pattern, name, want):
+    assert match_file(pattern, name) is want
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(["a", "b", "c", "dd"]), min_size=1, max_size=4))
+def test_match_path_reflexive(parts):
+    """Any concrete path matches itself (property)."""
+    p = "/" + "/".join(parts)
+    assert match_path(p, p)

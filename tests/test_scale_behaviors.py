@@ -1,0 +1,101 @@
+"""Scale behaviours claimed in DESIGN: straggler mitigation via `latest`
+flow control, and elastic ensemble re-sizing via re-matching."""
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import Wilkins, WorkflowGraph, h5
+
+
+def test_latest_mitigates_straggler_instance():
+    """An NxN ensemble with one slow producer: under `latest` the fast pairs
+    finish at their own rate and the consumer of the straggler just sees
+    fewer (fresher) snapshots -- nobody waits on the slow instance."""
+    yaml = """
+tasks:
+  - func: sim
+    taskCount: 3
+    outports:
+      - filename: o.h5
+        dsets: [{name: /x, memory: 1}]
+  - func: ana
+    taskCount: 3
+    inports:
+      - filename: o.h5
+        io_freq: -1
+        dsets: [{name: /x, memory: 1}]
+"""
+    lock = threading.Lock()
+    got = {0: 0, 1: 0, 2: 0}
+
+    def sim(comm):
+        slow = comm.instance == 1
+        for t in range(6):
+            time.sleep(0.12 if slow else 0.01)   # instance 1 straggles 12x
+            with h5.File("o.h5", "w") as f:
+                f.create_dataset("/x", data=np.array([t]))
+
+    def ana(comm):
+        while True:
+            f = h5.File("o.h5", "r")
+            if f is None:
+                return
+            time.sleep(0.02)
+            with lock:
+                got[comm.instance] += 1
+
+    w = Wilkins(yaml, {"sim": sim, "ana": ana})
+    t0 = time.monotonic()
+    rep = w.run(timeout=60)
+    wall = time.monotonic() - t0
+    # wall time tracks the straggler's own compute (~6*0.12) not 3x it; the
+    # fast pairs were never serialized behind instance 1
+    assert wall < 2.0
+    assert got[0] >= 1 and got[2] >= 1
+    assert rep.total_dropped >= 1      # straggler/fast mismatch absorbed
+
+
+def test_elastic_ensemble_resize_rematches():
+    """Scaling an ensemble is one YAML field: the graph re-matches ports and
+    re-plans instance pairing with no task-code changes (elastic resize)."""
+    def doc(n_prod, n_cons):
+        return {
+            "tasks": [
+                {"func": "p", "taskCount": n_prod,
+                 "outports": [{"filename": "o.h5",
+                               "dsets": [{"name": "/g", "memory": 1}]}]},
+                {"func": "c", "taskCount": n_cons,
+                 "inports": [{"filename": "o.h5",
+                              "dsets": [{"name": "/g", "memory": 1}]}]},
+            ]
+        }
+
+    g1 = WorkflowGraph.from_yaml(doc(4, 2))
+    g2 = WorkflowGraph.from_yaml(doc(8, 4))      # scaled up
+    assert len(g1.edges) == len(g2.edges) == 1
+    assert g1.edges[0].instance_links(4, 2) == [(0, 0), (1, 1), (2, 0), (3, 1)]
+    links2 = g2.edges[0].instance_links(8, 4)
+    assert len(links2) == 8
+    assert {c for _, c in links2} == {0, 1, 2, 3}   # all consumers used
+
+    # and the scaled workflow actually runs
+    counts = []
+    lock = threading.Lock()
+
+    def p():
+        with h5.File("o.h5", "w") as f:
+            f.create_dataset("/g", data=np.arange(8))
+
+    def c():
+        while True:
+            f = h5.File("o.h5", "r")
+            if f is None:
+                return
+            with lock:
+                counts.append(1)
+
+    w = Wilkins(doc(8, 4), {"p": p, "c": c})
+    w.run(timeout=30)
+    assert len(counts) == 8

@@ -1,0 +1,124 @@
+"""Logical-axis sharding rules, spec resolution, mesh filtering, HLO parsing."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch import hlo
+from repro.parallel.sharding import (DEFAULT_RULES, SERVE_RULES, ShardingRules,
+                                     logical_to_spec, tree_shardings, use_mesh,
+                                     weight)
+
+
+def _mesh1():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+
+
+def test_logical_to_spec_basic():
+    m = _mesh1()
+    spec = logical_to_spec(("batch", None, "tensor"), m, DEFAULT_RULES)
+    assert spec == P("data", None, "model")  # pod filtered out (not in mesh)
+
+
+def test_logical_axis_dedupe():
+    """An axis name may appear only once in a PartitionSpec: batch wins."""
+    m = _mesh1()
+    spec = logical_to_spec(("batch", "fsdp"), m, DEFAULT_RULES)
+    assert spec == P("data", None)
+
+
+def test_serve_rules_kvseq():
+    m = _mesh1()
+    spec = logical_to_spec((None, "batch", "kvseq", "kv", None), m, SERVE_RULES)
+    assert spec == P(None, "data", "model", None, None)
+    spec_d = logical_to_spec((None, "batch", "kvseq", "kv", None), m, DEFAULT_RULES)
+    assert spec_d == P(None, "data", None, None, None)
+
+
+def test_rules_with_override():
+    r = DEFAULT_RULES.with_(seq="model", weight_gather=True)
+    assert r.lookup("seq") == "model"
+    assert r.weight_gather
+    assert DEFAULT_RULES.lookup("seq") is None and not DEFAULT_RULES.weight_gather
+
+
+def test_tree_shardings_handles_replicated_sentinel():
+    m = _mesh1()
+    tree = {"a": ("fsdp", "tensor"), "b": (), "c": {"d": (None,)}}
+    sh = tree_shardings(m, tree)
+    assert sh["b"].spec == P()
+    assert sh["a"].spec == P("data", "model")
+
+
+def test_weight_gather_constrain():
+    m = _mesh1()
+    x = jax.numpy.ones((4, 4))
+    with use_mesh(m, DEFAULT_RULES.with_(weight_gather=True)):
+        y = weight(x, ("fsdp", "tensor"))
+        assert y.shape == x.shape
+    with use_mesh(m, DEFAULT_RULES):
+        y2 = weight(x, ("fsdp", "tensor"))
+        assert y2 is x  # identity when off
+
+
+def test_constrain_noop_without_mesh():
+    from repro.parallel.sharding import constrain
+
+    x = jax.numpy.ones((2, 2))
+    assert constrain(x, ("batch", None)) is x
+
+
+# ------------------------------------------------------------- HLO parsing
+HLO_SAMPLE = """
+HloModule test
+
+%body.1 (p: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %ar = f32[16,128]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%sum
+  ROOT %t = tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[16,128])) -> pred[] {
+  %c = s32[] constant(22)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[16,128]) -> f32[16,128] {
+  %ag = f32[256,128]{1,0} all-gather(%a), replica_groups=[16,16]<=[256], dimensions={0}
+  %w = (s32[], f32[16,128]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"22"}}
+  ROOT %r = f32[16,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_bytes_while_scaling():
+    stats = hlo.collective_bytes(HLO_SAMPLE)
+    # all-gather once: 256*128*4 bytes; all-reduce in loop: 16*128*4*2 * 22
+    assert stats.bytes_by_kind["all-gather"] == 256 * 128 * 4
+    assert stats.bytes_by_kind["all-reduce"] == 16 * 128 * 4 * 2 * 22
+    assert stats.count_by_kind["all-reduce"] == 22
+
+
+def test_shape_bytes_parsing():
+    assert hlo._shape_bytes("bf16[2,3]") == 12
+    assert hlo._shape_bytes("f32[] ") == 4
+    assert hlo._shape_bytes("(f32[2], s8[4])") == 12
+
+
+def test_roofline_terms():
+    r = hlo.Roofline(flops=197e12, hbm_bytes=819e9, coll_bytes=0.0,
+                     model_flops=98.5e12)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert r.bottleneck in ("compute", "memory")
+    assert abs(r.roofline_fraction - 0.5) < 1e-9
+
+
+def test_analytic_stats_scale_with_shape():
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config("tinyllama-1.1b")
+    train = SHAPES[0]
+    a256 = hlo.analytic_stats(cfg, train, n_data=16, n_model=16)
+    a512 = hlo.analytic_stats(cfg, train, n_data=32, n_model=16)
+    assert a512["flops"] < a256["flops"]  # more devices -> fewer flops each
