@@ -1,0 +1,199 @@
+"""Transport fast-path benchmark (the paper's Fig. 4 overhead lever).
+
+Measures the zero-copy data path against the legacy materialize-per-channel
+path on the three axes the tentpole targets:
+
+* ``fanout``  -- 1 producer -> N consumers in memory mode: bytes/copies
+  materialized by the transport (``repro.core.datamodel.transport_stats``),
+  producer/consumer wait, and wall time, for ``zero_copy`` on vs off.
+* ``spill``   -- the ``file: 1`` container: raw + ``np.memmap`` load vs a
+  full-read load (``mmap=False``), save/load latency and bytes copied.
+* ``pipeline``-- ``queue_depth`` sweep: producer wait with a slow consumer
+  (depth >= 2 lets the producer run ahead; depth 1 is the paper's rendezvous).
+
+Every row goes through ``common.emit`` and the whole result dict is persisted
+as ``BENCH_transport.json`` via ``common.write_json``.
+
+    PYTHONPATH=src python -m benchmarks.bench_transport [--smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core import Wilkins, h5
+from repro.core.datamodel import File, reset_transport_stats, transport_stats
+
+from .common import Timer, emit, write_json
+
+MIB = 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# 1 producer -> N consumers fan-out
+# ---------------------------------------------------------------------------
+def _fanout_yaml(consumers: int, queue_depth: int = 1) -> str:
+    return f"""
+tasks:
+  - func: producer
+    outports:
+      - filename: o.h5
+        dsets: [{{name: /grid, memory: 1}}]
+  - func: consumer
+    taskCount: {consumers}
+    inports:
+      - filename: o.h5
+        queue_depth: {queue_depth}
+        dsets: [{{name: /grid, memory: 1}}]
+"""
+
+
+def run_fanout(zero_copy: bool, mib_per_step: float, steps: int,
+               consumers: int = 4) -> Dict[str, Any]:
+    n = int(mib_per_step * MIB // 8)
+    payload = np.arange(n, dtype=np.uint64)
+
+    def producer():
+        for t in range(steps):
+            with h5.File("o.h5", "w") as f:
+                f.create_dataset("/grid", data=payload)
+
+    def consumer():
+        while True:
+            f = h5.File("o.h5", "r")
+            if f is None:
+                break
+            # touch the data like a real analysis task (no mutation)
+            _ = int(f["/grid"][0])
+
+    w = Wilkins(_fanout_yaml(consumers),
+                {"producer": producer, "consumer": consumer},
+                zero_copy=zero_copy)
+    reset_transport_stats()
+    with Timer() as t:
+        rep = w.run(timeout=600)
+    s = transport_stats().snapshot()
+    return {
+        "zero_copy": zero_copy,
+        "consumers": consumers,
+        "steps": steps,
+        "mib_per_step": mib_per_step,
+        "bytes_copied": s["bytes_copied"],
+        "copies": s["copies"],
+        "views": s["views"],
+        "bytes_moved": rep.total_bytes_moved,
+        "served": rep.total_served,
+        "producer_wait_s": sum(c.stats.producer_wait_s for c in rep.channels),
+        "consumer_wait_s": sum(c.stats.consumer_wait_s for c in rep.channels),
+        "wall_s": t.dt,
+    }
+
+
+def bench_fanout(mib_per_step: float, steps: int, consumers: int) -> Dict[str, Any]:
+    legacy = run_fanout(False, mib_per_step, steps, consumers)
+    fast = run_fanout(True, mib_per_step, steps, consumers)
+    ratio = legacy["bytes_copied"] / max(1, fast["bytes_copied"])
+    for tag, r in (("legacy", legacy), ("zero_copy", fast)):
+        emit(f"transport_fanout_{tag}_bytes_copied", r["bytes_copied"], "B",
+             f"{consumers}cons x {steps}steps x {mib_per_step}MiB")
+        emit(f"transport_fanout_{tag}_wall", r["wall_s"], "s")
+        emit(f"transport_fanout_{tag}_producer_wait", r["producer_wait_s"], "s")
+    emit("transport_fanout_copy_reduction", ratio, "x",
+         "legacy bytes_copied / zero_copy bytes_copied (>=2x acceptance)")
+    return {"legacy": legacy, "zero_copy": fast, "copy_reduction_x": ratio}
+
+
+# ---------------------------------------------------------------------------
+# spill container: raw + memmap vs full-read
+# ---------------------------------------------------------------------------
+def bench_spill(mib: float) -> Dict[str, Any]:
+    n = int(mib * MIB // 8)
+    f = File("spill.h5")
+    d = f.create_dataset("/grid", data=np.arange(n, dtype=np.float64))
+    d.attrs["t"] = 1
+    out: Dict[str, Any] = {"mib": mib}
+    with tempfile.TemporaryDirectory() as tmp:
+        with Timer() as t:
+            path = f.save(tmp)
+        out["save_s"] = t.dt
+        emit("transport_spill_save", t.dt, "s", f"{mib}MiB raw container")
+
+        for tag, mmap in (("mmap", True), ("copy", False)):
+            reset_transport_stats()
+            with Timer() as t:
+                g = File.load(path, mmap=mmap)
+                first = float(g["/grid"][0])  # touch a page
+            assert first == 0.0
+            s = transport_stats().snapshot()
+            out[f"load_{tag}_s"] = t.dt
+            out[f"load_{tag}_bytes_copied"] = s["bytes_copied"]
+            emit(f"transport_spill_load_{tag}", t.dt, "s",
+                 f"bytes_copied={s['bytes_copied']}")
+            del g
+    return out
+
+
+# ---------------------------------------------------------------------------
+# queue_depth pipelining
+# ---------------------------------------------------------------------------
+def bench_pipeline(steps: int, consumer_sleep: float) -> Dict[str, Any]:
+    out: Dict[str, Any] = {"steps": steps, "consumer_sleep_s": consumer_sleep}
+    for depth in (1, 2, 4):
+        def producer():
+            for t in range(steps):
+                with h5.File("o.h5", "w") as f:
+                    f.create_dataset("/g", data=np.array([t]))
+
+        def consumer():
+            while True:
+                f = h5.File("o.h5", "r")
+                if f is None:
+                    break
+                time.sleep(consumer_sleep)
+
+        w = Wilkins(_fanout_yaml(1, queue_depth=depth),
+                    {"producer": producer, "consumer": consumer})
+        with Timer() as t:
+            rep = w.run(timeout=600)
+        wait = sum(c.stats.producer_wait_s for c in rep.channels)
+        out[f"depth{depth}_producer_wait_s"] = wait
+        out[f"depth{depth}_wall_s"] = t.dt
+        out[f"depth{depth}_served"] = rep.total_served
+        emit(f"transport_pipeline_depth{depth}_producer_wait", wait, "s",
+             f"{steps} steps, consumer {consumer_sleep * 1e3:.0f}ms/step")
+    return out
+
+
+def main(smoke: bool = False) -> Dict[str, Any]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI smoke runs")
+    ap.add_argument("--mib", type=float, default=None,
+                    help="payload MiB per step for the fan-out benchmark")
+    args, _ = ap.parse_known_args([]) if smoke else ap.parse_known_args()
+    smoke = smoke or args.smoke
+
+    if smoke:
+        mib, steps, spill_mib = 4.0, 2, 4.0
+    else:
+        mib, steps, spill_mib = (args.mib or 100.0), 3, 64.0
+
+    results = {
+        "config": {"smoke": smoke, "fanout_mib_per_step": mib,
+                   "fanout_steps": steps, "spill_mib": spill_mib},
+        "fanout": bench_fanout(mib, steps, consumers=4),
+        "spill": bench_spill(spill_mib),
+        "pipeline": bench_pipeline(steps=6, consumer_sleep=0.02),
+    }
+    write_json("transport", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -9,8 +9,10 @@ run-over-run.
 
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Dict, List
+from typing import Any, Dict, List
 
 import numpy as np
 
@@ -21,6 +23,20 @@ def emit(name: str, value: float, unit: str, derived: str = "") -> None:
     row = f"{name},{value:.6g},{unit},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def write_json(name: str, payload: Dict[str, Any], directory: str = None) -> str:
+    """Persist a benchmark's results as ``BENCH_<name>.json`` so the perf
+    trajectory is machine-readable run-over-run (``BENCH_DIR`` overrides the
+    output directory; defaults to the repo root / cwd)."""
+    directory = directory or os.environ.get("BENCH_DIR", ".")
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}", flush=True)
+    return path
 
 
 def synthetic_datasets(n_grid: int = 100_000, n_particles: int = 100_000,

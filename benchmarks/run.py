@@ -1,33 +1,68 @@
 """Benchmark suite entry point: one benchmark per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--smoke]
 
   overhead     -> paper Fig. 4  (Wilkins vs transport-alone, weak scaling)
   flowcontrol  -> paper Table 2 + Fig. 5 (all/some/latest, Gantt CSV)
   ensembles    -> paper Figs. 7/8/9 (fan-out / fan-in / NxN)
   nucleation   -> paper Fig. 10 (materials-science NxN ensemble, nwriters=1)
   cosmo        -> paper Table 3 (Nyx+Reeber, custom actions + io_freq sweep)
+  transport    -> zero-copy fast path (CoW fan-out, mmap spill, queue_depth)
   roofline     -> §Roofline table from the dry-run grid (not a paper artifact)
 
-Every benchmark prints ``name,value,unit,derived`` CSV rows.
+``--smoke`` is the tier-1 entry point: it runs the pytest suite and then a
+small transport bench, and fails if either fails.
+
+Every benchmark prints ``name,value,unit,derived`` CSV rows; the transport
+bench additionally writes machine-readable ``BENCH_transport.json``.
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+import subprocess
 import sys
 import time
 import traceback
 
 SUITES = ("overhead", "flowcontrol", "ensembles", "nucleation", "cosmo",
-          "roofline")
+          "transport", "roofline")
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _smoke() -> int:
+    """Tier-1 gate: pytest suite + transport bench at smoke sizes."""
+    env = dict(os.environ)
+    src = os.path.join(_REPO_ROOT, "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    if src not in sys.path:  # the in-process bench import needs it too
+        sys.path.insert(0, src)
+    print("==== smoke: pytest ====", flush=True)
+    rc = subprocess.call([sys.executable, "-m", "pytest", "-x", "-q"],
+                         cwd=_REPO_ROOT, env=env)
+    if rc != 0:
+        print("==== smoke: pytest FAILED ====", flush=True)
+        return rc
+    print("==== smoke: bench_transport ====", flush=True)
+    from . import bench_transport
+    results = bench_transport.main(smoke=True)
+    ratio = results["fanout"]["copy_reduction_x"]
+    print(f"==== smoke: copy_reduction={ratio:.1f}x ====", flush=True)
+    return 0 if ratio >= 2.0 else 1
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=SUITES, default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the tier-1 pytest suite + a quick transport "
+                         "bench and exit")
     args = ap.parse_args()
+    if args.smoke:
+        return _smoke()
     suites = [args.only] if args.only else list(SUITES)
 
     cwd = os.getcwd()

@@ -10,7 +10,8 @@ Layers (paper Fig. 1):
 """
 
 from . import datamodel, h5, redistribute
-from .channel import Channel, ChannelStats, FlowControl
+from .channel import (Channel, ChannelMux, ChannelStats, ChannelTimeout,
+                      FlowControl, NO_DATA)
 from .comm import TaskComm, world
 from .datamodel import BlockOwnership, Dataset, File, Group
 from .driver import TaskFailure, Wilkins, WorkflowReport
@@ -22,8 +23,11 @@ __all__ = [
     "h5",
     "redistribute",
     "Channel",
+    "ChannelMux",
     "ChannelStats",
+    "ChannelTimeout",
     "FlowControl",
+    "NO_DATA",
     "TaskComm",
     "world",
     "BlockOwnership",

@@ -8,17 +8,27 @@ users never construct them.
 Flow control (paper §3.6), selected by ``io_freq``:
 
 * ``all``    (io_freq in {0,1}) -- rendezvous: the producer blocks at file
-  close until the consumer has taken the previous item (queue of depth 1).
+  close until a queue slot frees up (bounded ring queue of ``queue_depth``
+  items, default 1 = the paper's depth-1 rendezvous; depth >= 2 pipelines the
+  producer ahead of the consumer).
 * ``some``   (io_freq = N > 1) -- the producer serves only every Nth file
   close; skipped closes drop the data immediately and the producer continues.
 * ``latest`` (io_freq = -1)    -- the producer serves only if the consumer is
   currently waiting for data; otherwise it skips this timestep.  Older data
   are never queued, so the consumer always sees the freshest snapshot.
 
+Transport fast path: ``filter_file`` ships copy-on-write dataset *views*
+(``Dataset.view``), so a fan-out of N channels serves ONE filtered payload --
+the per-dataset ``_Share`` refcount tracks the sharing and the first consumer
+write materializes a private copy.  Pass ``zero_copy=False`` to get the old
+materialize-per-channel behaviour (the benchmark's legacy baseline).
+
 The channel also implements the producer-query protocol of §3.5.1: when the
 producer finishes it marks the channel done; a consumer ``get()`` after that
 returns ``None`` ("all done"), which is how stateful consumers exit their loop
-and how the driver decides to stop relaunching stateless consumers.
+and how the driver decides to stop relaunching stateless consumers.  A
+``get(timeout=...)`` that elapses raises ``ChannelTimeout`` -- timeouts are
+*not* conflated with producer-done.
 
 Every state transition is recorded as a timestamped event so benchmarks can
 reconstruct the paper's Fig. 5 Gantt charts.
@@ -27,14 +37,47 @@ reconstruct the paper's Fig. 5 Gantt charts.
 from __future__ import annotations
 
 import os
+import re
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
-from .datamodel import File, match_file, match_path
+import numpy as np
 
-__all__ = ["FlowControl", "Channel", "ChannelStats"]
+from .datamodel import (File, compile_file_pattern, compile_path_pattern,
+                        transport_stats)
+
+__all__ = [
+    "FlowControl",
+    "Channel",
+    "ChannelStats",
+    "ChannelTimeout",
+    "ChannelMux",
+    "NO_DATA",
+]
+
+
+class ChannelTimeout(Exception):
+    """``Channel.get(timeout=...)`` elapsed with no data and no producer-done."""
+
+
+class _NoData:
+    """Sentinel: channel queue is empty but the producer is still live."""
+
+    _instance: Optional["_NoData"] = None
+
+    def __new__(cls) -> "_NoData":
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:
+        return "NO_DATA"
+
+
+NO_DATA = _NoData()
 
 
 class FlowControl:
@@ -64,6 +107,37 @@ class ChannelStats:
     events: List[Tuple[float, str, str]] = field(default_factory=list)  # (t, who, what)
 
 
+class ChannelMux:
+    """Condition-variable multiplexer: wait for ANY registered channel to
+    serve or finish, without polling.
+
+    A channel bumps the mux version (``notify``) on every state change; the
+    waiter snapshots the version (``token``) *before* scanning channels, so a
+    serve that lands between the scan and the wait is never missed.
+    """
+
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._version = 0
+
+    def notify(self) -> None:
+        with self._cond:
+            self._version += 1
+            self._cond.notify_all()
+
+    def token(self) -> int:
+        with self._cond:
+            return self._version
+
+    def wait(self, token: int, timeout: Optional[float] = None) -> int:
+        """Block until the version moves past ``token`` (or timeout); the
+        caller rescans its channels either way, so spurious wakeups are safe."""
+        with self._cond:
+            if self._version == token:
+                self._cond.wait(timeout)
+            return self._version
+
+
 class Channel:
     """One producer-instance -> consumer-instance coupling for one file port."""
 
@@ -78,6 +152,8 @@ class Channel:
         io_freq: int = 1,
         spill_dir: Optional[str] = None,
         record_events: bool = False,
+        queue_depth: int = 1,
+        zero_copy: bool = True,
     ):
         self.name = name
         self.producer = producer
@@ -89,12 +165,22 @@ class Channel:
         self.strategy, self.freq = FlowControl.from_io_freq(io_freq)
         self.spill_dir = spill_dir or os.path.join("/tmp", "wilkins_spill")
         self.record_events = record_events
+        if queue_depth < 1:
+            raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
+        self.queue_depth = int(queue_depth)
+        self.zero_copy = bool(zero_copy)
+
+        # precompiled matchers (LRU-cached globally, pinned here for the hot path)
+        self._file_matcher = compile_file_pattern(filename_pattern)
+        self._dset_matchers = [compile_path_pattern(p) for p in self.dset_patterns]
 
         self._lock = threading.Condition()
-        self._item: Optional[Any] = None  # depth-1 slot (rendezvous semantics)
+        self._queue: Deque[Tuple[str, Any]] = deque()  # bounded ring (queue_depth)
         self._done = False
         self._consumer_waiting = 0
         self._close_count = 0
+        self._spill_seq = 0
+        self._listeners: List[ChannelMux] = []
         self.stats = ChannelStats()
 
     # ------------------------------------------------------------------ util
@@ -102,32 +188,61 @@ class Channel:
         if self.record_events:
             self.stats.events.append((time.monotonic(), who, what))
 
+    def add_listener(self, mux: ChannelMux) -> None:
+        with self._lock:
+            self._listeners.append(mux)
+
+    def remove_listener(self, mux: ChannelMux) -> None:
+        with self._lock:
+            try:
+                self._listeners.remove(mux)
+            except ValueError:
+                pass
+
+    def _notify_listeners(self) -> None:
+        with self._lock:
+            listeners = list(self._listeners)
+        for mux in listeners:
+            mux.notify()
+
     def matches_file(self, filename: str) -> bool:
-        return match_file(self.filename_pattern, filename) or match_file(
-            filename, self.filename_pattern
-        )
+        # bidirectional: either side's pattern may be the more general one
+        return self._file_matcher.matches(filename) or compile_file_pattern(
+            filename
+        ).matches(self.filename_pattern)
 
     def filter_file(self, f: File) -> File:
-        """Data-centric selection: ship only the datasets this port asked for."""
+        """Data-centric selection: ship only the datasets this port asked for.
+
+        Zero-copy mode grafts CoW views; legacy mode materializes a private
+        copy per dataset (the seed's per-channel deep-copy behaviour).
+        """
         out = File(f.filename)
         out.attrs.update(f.attrs)
-        n = 0
         for ds in f.visit_datasets():
-            if any(match_path(p, ds.path) for p in self.dset_patterns):
-                nd = out.create_dataset(ds.path, data=ds.read_direct())
-                nd.attrs.update(ds.attrs)
-                nd.ownership = ds.ownership
-                n += 1
+            if any(m.matches(ds.path) for m in self._dset_matchers):
+                if self.zero_copy:
+                    out.attach_view(ds)
+                else:
+                    buf = np.array(ds.read_direct())  # eager materialization
+                    transport_stats().record_copy(buf.nbytes)
+                    nd = out.create_dataset(ds.path, data=buf, copy=False)
+                    nd.attrs.update(ds.attrs)
+                    nd.ownership = ds.ownership
         return out
 
     # ------------------------------------------------------------- producer
-    def offer(self, f: File) -> bool:
+    def offer(self, f: File, _payload_cache: Optional[Dict[Any, File]] = None) -> bool:
         """Producer-side serve with flow control. Returns True if served.
 
         Called from the VOL layer at (after-)file-close time, mirroring
         LowFive's serve-on-close. The flow-control decision happens *before*
-        any data is copied or queued, so a skipped timestep costs nothing --
-        that is the entire point of the paper's §3.6.
+        any data is filtered, copied, or queued, so a skipped timestep costs
+        nothing -- that is the entire point of the paper's §3.6.
+
+        ``_payload_cache`` (passed by ``VOL.serve_all``) shares ONE filtered
+        payload across every fan-out channel with the same dataset selection:
+        each channel ships a structural ``File.view()`` over the same buffers.
         """
         with self._lock:
             self._close_count += 1
@@ -142,28 +257,44 @@ class Channel:
                 self._event("producer", "skip_latest")
                 return False
 
-        payload = self._prepare(f)
+        payload = self._prepare(f, _payload_cache)
         t0 = time.monotonic()
         with self._lock:
             self._event("producer", "wait_begin")
-            while self._item is not None and not self._done:
+            while len(self._queue) >= self.queue_depth and not self._done:
                 self._lock.wait()
             self.stats.producer_wait_s += time.monotonic() - t0
             self._event("producer", "wait_end")
             if self._done:
                 return False
-            self._item = payload
+            self._queue.append(payload)
             self.stats.served += 1
             self.stats.bytes_moved += f.total_bytes()
             self._event("producer", "serve")
             self._lock.notify_all()
+        self._notify_listeners()
         return True
 
-    def _prepare(self, f: File) -> Any:
-        sub = self.filter_file(f)
+    def _prepare(self, f: File, cache: Optional[Dict[Any, File]] = None) -> Tuple[str, Any]:
+        if self.zero_copy:
+            key = tuple(self.dset_patterns)
+            base = cache.get(key) if cache is not None else None
+            if base is None:
+                base = self.filter_file(f)
+                if cache is not None:
+                    cache[key] = base
+            sub = base.view()  # per-channel tree, shared buffers
+        else:
+            sub = self.filter_file(f)
         if self.mode == "file":
             # Spill through "disk" -- the paper's ``file: 1`` transport path.
-            path = sub.save(self.spill_dir)
+            # One container per served step so queued (queue_depth > 1) and
+            # concurrently-read spills never clobber each other.
+            with self._lock:
+                seq = self._spill_seq
+                self._spill_seq += 1
+            base_name = f"{os.path.basename(f.filename)}.{_sanitize(self.name)}.{seq:06d}"
+            path = sub.save(self.spill_dir, basename=base_name)
             return ("file", path)
         return ("memory", sub)
 
@@ -173,43 +304,98 @@ class Channel:
             self._done = True
             self._event("producer", "done")
             self._lock.notify_all()
+        self._notify_listeners()
 
     # ------------------------------------------------------------- consumer
+    def _take(self) -> Tuple[str, Any]:
+        """Pop under self._lock (caller holds it) and wake the producer."""
+        item = self._queue.popleft()
+        self._lock.notify_all()
+        return item
+
+    def _deliver(self, item: Tuple[str, Any]) -> File:
+        self._event("consumer", "recv")
+        kind, payload = item
+        if kind == "file":
+            f = File.load(payload, mmap=True)
+            try:
+                os.unlink(payload)  # np.memmap keeps the mapping alive (POSIX)
+            except OSError:
+                pass
+            return f
+        return payload
+
     def get(self, timeout: Optional[float] = None) -> Optional[File]:
-        """Consumer-side blocking receive; None means producer is all-done."""
+        """Consumer-side blocking receive.
+
+        Returns the next ``File``; ``None`` means the producer is all-done
+        (query protocol).  If ``timeout`` elapses first, raises
+        ``ChannelTimeout`` -- distinct from producer-done, and the elapsed
+        wait still lands in ``consumer_wait_s``.
+        """
         t0 = time.monotonic()
+        deadline = None if timeout is None else t0 + timeout
         with self._lock:
             self._consumer_waiting += 1
             self._lock.notify_all()  # wake a producer doing `latest` rendezvous
             self._event("consumer", "wait_begin")
             try:
-                while self._item is None and not self._done:
-                    if not self._lock.wait(timeout=timeout):
-                        return None
+                while not self._queue and not self._done:
+                    remaining = None if deadline is None else deadline - time.monotonic()
+                    if remaining is not None and remaining <= 0:
+                        self.stats.consumer_wait_s += time.monotonic() - t0
+                        self._event("consumer", "timeout")
+                        raise ChannelTimeout(
+                            f"{self.name}: no data within {timeout}s")
+                    self._lock.wait(timeout=remaining)
                 self.stats.consumer_wait_s += time.monotonic() - t0
                 self._event("consumer", "wait_end")
-                if self._item is None:
+                if not self._queue:
                     return None  # all done
-                kind, payload = self._item
-                self._item = None
-                self._lock.notify_all()
+                item = self._take()
             finally:
                 self._consumer_waiting -= 1
-        self._event("consumer", "recv")
-        if kind == "file":
-            return File.load(payload)
-        return payload
+        return self._deliver(item)
+
+    def try_get(self) -> Any:
+        """Non-blocking receive: a ``File``, ``None`` (producer all-done), or
+        ``NO_DATA`` (queue empty, producer still live)."""
+        with self._lock:
+            if self._queue:
+                item = self._take()
+            elif self._done:
+                return None
+            else:
+                return NO_DATA
+        return self._deliver(item)
+
+    def set_consumer_waiting(self, waiting: bool) -> None:
+        """Mark the consumer as blocked on this channel (used by the VOL
+        multiplexer so the `latest` strategy sees fan-in waiters)."""
+        with self._lock:
+            if waiting:
+                self._consumer_waiting += 1
+                self._event("consumer", "wait_begin")
+                self._lock.notify_all()
+            else:
+                self._consumer_waiting -= 1
+                self._event("consumer", "wait_end")
 
     def peek_pending(self) -> bool:
         with self._lock:
-            return self._item is not None
+            return bool(self._queue)
 
     def is_done(self) -> bool:
         with self._lock:
-            return self._done and self._item is None
+            return self._done and not self._queue
 
     def __repr__(self) -> str:
         return (
             f"<Channel {self.name} {self.producer}->{self.consumer} "
-            f"{self.filename_pattern} mode={self.mode} fc={self.strategy}/{self.freq}>"
+            f"{self.filename_pattern} mode={self.mode} fc={self.strategy}/{self.freq} "
+            f"depth={self.queue_depth}>"
         )
+
+
+def _sanitize(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]+", "_", name)

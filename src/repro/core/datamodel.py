@@ -11,14 +11,28 @@ defines.
 Objects
 -------
 ``Dataset``  -- typed ndarray leaf + attributes + (optional) per-rank block
-                ownership map used by the M->N redistribution layer.
+                ownership map used by the M->N redistribution layer.  Supports
+                copy-on-write views (``Dataset.view()``): the underlying
+                ndarray is shared read-only across any number of views and the
+                copy is deferred to the first write, so fan-out transport ships
+                metadata, not data.
 ``Group``    -- named children (groups or datasets) + attributes.
 ``File``     -- root group + filename; knows how to spill to / load from disk
-                (npz + json container: *our container, HDF5's data model*).
+                (raw binary container: json header + 64-byte-aligned raw array
+                segments, loaded zero-copy via ``np.memmap``).
 
 Paths follow HDF5 conventions: ``/group1/particles`` etc.  Glob matching for
 ports ("*.h5", "/particles/*") lives here too since it is a data-model level
-concern.
+concern; patterns are compiled once to regexes and LRU-cached (see
+``compile_path_pattern`` / ``compile_file_pattern``).
+
+Ownership rules (see DESIGN.md):
+
+* ``Dataset`` mutation goes through ``__setitem__`` / ``write_slab``; both
+  materialize a private copy first if the buffer is shared or read-only
+  (memmap).  Copies are counted in ``transport_stats()``.
+* ``read_direct`` / ``__getitem__`` return a read-only alias while the buffer
+  is shared, so a reader cannot silently corrupt a sibling view.
 """
 
 from __future__ import annotations
@@ -27,8 +41,10 @@ import fnmatch
 import io
 import json
 import os
+import re
 import threading
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -38,15 +54,130 @@ __all__ = [
     "Group",
     "File",
     "BlockOwnership",
+    "TransportStats",
+    "transport_stats",
+    "reset_transport_stats",
     "match_path",
     "match_file",
+    "compile_path_pattern",
+    "compile_file_pattern",
     "split_path",
 ]
 
+_SPILL_MAGIC = b"WLKNRAW1"
+_SPILL_ALIGN = 64
 
+
+# ---------------------------------------------------------------------------
+# transport instrumentation
+# ---------------------------------------------------------------------------
+class TransportStats:
+    """Process-wide counters for data-movement work in the transport path.
+
+    ``bytes_copied`` counts actual buffer materializations (eager copies in
+    the legacy path, deferred CoW copies in the fast path); ``views`` counts
+    zero-copy dataset views handed out.  Benchmarks reset + read these to
+    measure the Fig. 4 overhead lever.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.copies = 0
+        self.bytes_copied = 0
+        self.cow_copies = 0
+        self.views = 0
+
+    def record_copy(self, nbytes: int, cow: bool = False) -> None:
+        with self._lock:
+            self.copies += 1
+            self.bytes_copied += int(nbytes)
+            if cow:
+                self.cow_copies += 1
+
+    def record_view(self) -> None:
+        with self._lock:
+            self.views += 1
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "copies": self.copies,
+                "bytes_copied": self.bytes_copied,
+                "cow_copies": self.cow_copies,
+                "views": self.views,
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self.copies = self.bytes_copied = self.cow_copies = self.views = 0
+
+
+_TRANSPORT_STATS = TransportStats()
+
+
+def transport_stats() -> TransportStats:
+    return _TRANSPORT_STATS
+
+
+def reset_transport_stats() -> None:
+    _TRANSPORT_STATS.reset()
+
+
+# ---------------------------------------------------------------------------
+# glob matching (LRU-cached compiled regexes)
+# ---------------------------------------------------------------------------
 def split_path(path: str) -> List[str]:
     """Split an HDF5 path into components, ignoring leading/duplicate slashes."""
     return [p for p in path.split("/") if p]
+
+
+@lru_cache(maxsize=4096)
+def _compile_fnmatch(pattern: str) -> "re.Pattern[str]":
+    return re.compile(fnmatch.translate(pattern))
+
+
+class PathMatcher:
+    """A compiled HDF5-path glob (LowFive prefix semantics, see match_path)."""
+
+    __slots__ = ("pattern", "_regexes")
+
+    def __init__(self, pattern: str):
+        self.pattern = pattern
+        pat = "/" + "/".join(split_path(pattern))
+        regexes = [_compile_fnmatch(pat)]
+        if pat.endswith("/*"):
+            # prefix semantics for trailing '*': /a/* also matches deeper paths
+            regexes.append(_compile_fnmatch(pat + "/*"))
+        # a pattern naming a group matches everything below it
+        regexes.append(_compile_fnmatch(pat.rstrip("/") + "/*"))
+        self._regexes = tuple(regexes)
+
+    def matches(self, path: str) -> bool:
+        p = "/" + "/".join(split_path(path))
+        return any(r.match(p) is not None for r in self._regexes)
+
+
+class FileMatcher:
+    """A compiled filename glob (basename semantics)."""
+
+    __slots__ = ("pattern", "_regex")
+
+    def __init__(self, pattern: str):
+        self.pattern = pattern
+        self._regex = _compile_fnmatch(os.path.basename(pattern))
+
+    def matches(self, filename: str) -> bool:
+        return self._regex.match(os.path.basename(filename)) is not None
+
+
+@lru_cache(maxsize=4096)
+def compile_path_pattern(pattern: str) -> PathMatcher:
+    return PathMatcher(pattern)
+
+
+@lru_cache(maxsize=4096)
+def compile_file_pattern(pattern: str) -> FileMatcher:
+    return FileMatcher(pattern)
 
 
 def match_path(pattern: str, path: str) -> bool:
@@ -56,22 +187,12 @@ def match_path(pattern: str, path: str) -> bool:
     prefix matches any suffix (LowFive-style prefix semantics), so
     ``/particles/*`` matches ``/particles/pos/value`` as well.
     """
-    pat = "/" + "/".join(split_path(pattern))
-    p = "/" + "/".join(split_path(path))
-    if fnmatch.fnmatch(p, pat):
-        return True
-    # prefix semantics for trailing '*': /a/* also matches deeper paths
-    if pat.endswith("/*") and fnmatch.fnmatch(p, pat + "/*"):
-        return True
-    # a pattern naming a group matches everything below it
-    if fnmatch.fnmatch(p, pat.rstrip("/") + "/*"):
-        return True
-    return False
+    return compile_path_pattern(pattern).matches(path)
 
 
 def match_file(pattern: str, filename: str) -> bool:
     """Filename glob matching: ``plt*.h5`` matches ``plt00010.h5``."""
-    return fnmatch.fnmatch(os.path.basename(filename), os.path.basename(pattern))
+    return compile_file_pattern(pattern).matches(filename)
 
 
 @dataclass
@@ -95,8 +216,24 @@ class BlockOwnership:
         return len(self.blocks)
 
 
+class _Share:
+    """Refcount for an ndarray buffer shared across CoW dataset views."""
+
+    __slots__ = ("count", "lock")
+
+    def __init__(self, count: int = 1):
+        self.count = count
+        self.lock = threading.Lock()
+
+
 class Dataset:
-    """A typed n-d array leaf with attributes and hyperslab read/write."""
+    """A typed n-d array leaf with attributes and hyperslab read/write.
+
+    Buffers are copy-on-write: ``view()`` shares the ndarray (refcounted via
+    ``_Share``); the first write through any sharer materializes a private
+    copy.  Datasets loaded from the spill container are ``np.memmap`` backed
+    and obey the same rule (read-only until first write copies).
+    """
 
     def __init__(
         self,
@@ -105,6 +242,7 @@ class Dataset:
         dtype: Any,
         data: Optional[np.ndarray] = None,
         parent: Optional["Group"] = None,
+        copy: bool = True,
     ):
         self.name = name
         self.shape = tuple(int(s) for s in shape)
@@ -112,12 +250,70 @@ class Dataset:
         self.attrs: Dict[str, Any] = {}
         self.parent = parent
         self.ownership: Optional[BlockOwnership] = None
+        self._share = _Share(1)
         if data is not None:
-            data = np.asarray(data)
-            assert data.shape == self.shape, (data.shape, self.shape)
-            self._data = np.ascontiguousarray(data, dtype=self.dtype)
+            # keep subclasses (np.memmap) intact on the zero-copy path
+            arr = data if isinstance(data, np.ndarray) else np.asarray(data)
+            assert arr.shape == self.shape, (arr.shape, self.shape)
+            if copy:
+                # Snapshot the caller's array into the file (h5py semantics).
+                # Adopting a caller-owned buffer would hand the CoW layer an
+                # alias the caller can mutate behind its back -- one copy at
+                # creation buys a sound invariant: every Dataset buffer is
+                # reachable only through Datasets.
+                out = np.array(arr, dtype=self.dtype, order="C")
+                _TRANSPORT_STATS.record_copy(out.nbytes)
+                self._data = out
+            else:
+                # Internal zero-copy path (spill load, legacy filter): the
+                # caller guarantees nothing else writes this buffer.  A
+                # read-only buffer (e.g. an np.memmap opened mode="r") stays
+                # shared until the first write triggers the CoW copy.
+                assert arr.dtype == self.dtype, (arr.dtype, self.dtype)
+                self._data = arr
         else:
             self._data = np.zeros(self.shape, dtype=self.dtype)
+
+    # -- copy-on-write ------------------------------------------------------
+    def view(self, parent: Optional["Group"] = None) -> "Dataset":
+        """Zero-copy view sharing this dataset's buffer (copy deferred to
+        first write, on either side).  Attributes are shallow-copied so a
+        view can annotate without touching the source."""
+        ds = Dataset.__new__(Dataset)
+        ds.name = self.name
+        ds.shape = self.shape
+        ds.dtype = self.dtype
+        ds.attrs = dict(self.attrs)
+        ds.parent = parent
+        ds.ownership = self.ownership
+        with self._share.lock:
+            self._share.count += 1
+        ds._share = self._share
+        ds._data = self._data
+        _TRANSPORT_STATS.record_view()
+        return ds
+
+    @property
+    def share_count(self) -> int:
+        return self._share.count
+
+    def _is_exclusive(self) -> bool:
+        return self._share.count == 1 and self._data.flags.writeable
+
+    def _ensure_writable(self) -> None:
+        """Materialize a private copy if the buffer is shared or read-only."""
+        share = self._share
+        with share.lock:
+            if share.count == 1 and self._data.flags.writeable:
+                return
+            # Copy while holding the share lock: a sibling sharer must not
+            # pass its own count==1 fast path and write the buffer in place
+            # before this snapshot is complete (torn-copy race).
+            new = np.array(self._data)
+            share.count -= 1
+        _TRANSPORT_STATS.record_copy(new.nbytes, cow=True)
+        self._data = new
+        self._share = _Share(1)
 
     # -- HDF5-ish surface ---------------------------------------------------
     @property
@@ -127,13 +323,19 @@ class Dataset:
         return self.parent.path.rstrip("/") + "/" + self.name
 
     def __getitem__(self, key) -> np.ndarray:
-        return self._data[key]
+        return self.read_direct()[key]
 
     def __setitem__(self, key, value) -> None:
+        self._ensure_writable()
         self._data[key] = value
 
     def read_direct(self) -> np.ndarray:
-        return self._data
+        """The backing array; a read-only alias while the buffer is shared."""
+        if self._is_exclusive():
+            return self._data
+        alias = self._data.view()
+        alias.flags.writeable = False
+        return alias
 
     @property
     def nbytes(self) -> int:
@@ -142,9 +344,10 @@ class Dataset:
     def select(self, starts: Sequence[int], shape: Sequence[int]) -> np.ndarray:
         """Hyperslab read (contiguous block selection)."""
         slc = tuple(slice(s, s + n) for s, n in zip(starts, shape))
-        return self._data[slc]
+        return self.read_direct()[slc]
 
     def write_slab(self, starts: Sequence[int], block: np.ndarray) -> None:
+        self._ensure_writable()
         slc = tuple(slice(s, s + n) for s, n in zip(starts, block.shape))
         self._data[slc] = block
 
@@ -186,20 +389,30 @@ class Group:
         shape: Optional[Tuple[int, ...]] = None,
         dtype: Any = None,
         data: Optional[np.ndarray] = None,
+        copy: bool = True,
     ) -> Dataset:
         comps = split_path(path)
         if not comps:
             raise ValueError("empty dataset path")
         parent = self.require_group("/".join(comps[:-1])) if len(comps) > 1 else self
         if data is not None:
-            data = np.asarray(data)
+            if not isinstance(data, np.ndarray):
+                data = np.asarray(data)
             shape = data.shape if shape is None else tuple(shape)
             dtype = data.dtype if dtype is None else dtype
         if shape is None or dtype is None:
             raise ValueError("need shape+dtype or data")
-        ds = Dataset(comps[-1], tuple(shape), dtype, data=data, parent=parent)
+        ds = Dataset(comps[-1], tuple(shape), dtype, data=data, parent=parent, copy=copy)
         parent.children[comps[-1]] = ds
         return ds
+
+    def attach_view(self, ds: Dataset) -> Dataset:
+        """Graft a zero-copy view of ``ds`` at the same path under this root."""
+        comps = split_path(ds.path)
+        parent = self.require_group("/".join(comps[:-1])) if len(comps) > 1 else self
+        v = ds.view(parent=parent)
+        parent.children[comps[-1]] = v
+        return v
 
     def get(self, path: str) -> Optional[Union["Group", Dataset]]:
         node: Union[Group, Dataset] = self
@@ -232,14 +445,21 @@ class Group:
         return f"<Group {self.path} ({len(self.children)} children)>"
 
 
+def _align_up(n: int, align: int = _SPILL_ALIGN) -> int:
+    return (n + align - 1) // align * align
+
+
 class File(Group):
     """Root of the tree; also the unit of transport in Wilkins.
 
     LowFive serves data producer->consumer at file-close granularity; the
     channel layer ships ``File`` objects (or their metadata + selected
     datasets).  ``save``/``load`` implement the *file* transport option
-    (``file: 1`` in YAML) -- data spilled through the filesystem in an
-    npz+json container (h5py unavailable; data model preserved).
+    (``file: 1`` in YAML) -- data spilled through the filesystem in a raw
+    binary container: an 8-byte magic, a json header, then each dataset's
+    bytes at a 64-byte-aligned offset.  ``load`` maps the segments with
+    ``np.memmap`` so reading a spill does zero redundant copies; the CoW rule
+    on ``Dataset`` materializes a private buffer only on first write.
     """
 
     def __init__(self, filename: str):
@@ -251,52 +471,132 @@ class File(Group):
     def path(self) -> str:
         return "/"
 
+    # -- zero-copy structural view ------------------------------------------
+    def view(self) -> "File":
+        """Structural clone whose datasets are CoW views of this file's.
+
+        This is what fan-out ships: N consumers get N cheap trees over ONE
+        payload; the refcount on each dataset's ``_Share`` tracks the sharing.
+        """
+        out = File(self.filename)
+        out.attrs.update(self.attrs)
+
+        def walk(src: Group, dst: Group) -> None:
+            for nm, child in src.children.items():
+                if isinstance(child, Dataset):
+                    dst.children[nm] = child.view(parent=dst)
+                else:
+                    g = dst.require_group(nm)
+                    g.attrs.update(child.attrs)
+                    walk(child, g)
+
+        walk(self, out)
+        return out
+
     # -- disk container (the ``file: 1`` transport path) ---------------------
-    def save(self, directory: str) -> str:
+    def save(self, directory: str, basename: Optional[str] = None) -> str:
         os.makedirs(directory, exist_ok=True)
-        target = os.path.join(directory, os.path.basename(self.filename))
-        arrays: Dict[str, np.ndarray] = {}
-        meta: Dict[str, Any] = {"filename": self.filename, "datasets": {}, "attrs": {}}
+        target = os.path.join(directory, basename or os.path.basename(self.filename))
+        entries: List[Tuple[str, Dataset]] = []
 
         def walk(g: Group, prefix: str) -> None:
             for nm, child in g.children.items():
                 p = prefix + "/" + nm
                 if isinstance(child, Dataset):
-                    key = f"d{len(arrays)}"
-                    arrays[key] = child.read_direct()
-                    meta["datasets"][p] = {
-                        "key": key,
-                        "attrs": _jsonable(child.attrs),
-                        "ownership": (
-                            {str(r): [list(s), list(sh)] for r, (s, sh) in child.ownership.blocks.items()}
-                            if child.ownership
-                            else None
-                        ),
-                    }
+                    entries.append((p, child))
                 else:
                     walk(child, p)
 
         walk(self, "")
-        buf = io.BytesIO()
-        np.savez(buf, **arrays)
+        meta: Dict[str, Any] = {
+            "filename": self.filename,
+            "attrs": _jsonable(self.attrs),
+            "datasets": {},
+        }
+        rel = 0
+        for p, ds in entries:
+            rel = _align_up(rel)
+            meta["datasets"][p] = {
+                "dtype": ds.dtype.str,
+                "shape": list(ds.shape),
+                "offset": rel,
+                "nbytes": ds.nbytes,
+                "attrs": _jsonable(ds.attrs),
+                "ownership": (
+                    {str(r): [list(s), list(sh)] for r, (s, sh) in ds.ownership.blocks.items()}
+                    if ds.ownership
+                    else None
+                ),
+            }
+            rel += ds.nbytes
+        header = json.dumps(meta).encode()
+        data_start = _align_up(len(_SPILL_MAGIC) + 8 + len(header))
+
         tmp = target + ".tmp"
         with open(tmp, "wb") as f:
-            header = json.dumps(meta).encode()
+            f.write(_SPILL_MAGIC)
             f.write(len(header).to_bytes(8, "little"))
             f.write(header)
-            f.write(buf.getvalue())
+            f.write(b"\0" * (data_start - f.tell()))
+            for p, ds in entries:
+                if ds.nbytes == 0:
+                    continue  # memoryview can't cast zero-size shapes
+                off = data_start + meta["datasets"][p]["offset"]
+                f.write(b"\0" * (off - f.tell()))
+                arr = ds.read_direct()
+                if not arr.flags.c_contiguous:
+                    arr = np.ascontiguousarray(arr)
+                f.write(memoryview(arr).cast("B"))
         os.replace(tmp, target)  # atomic
         return target
 
     @classmethod
-    def load(cls, path: str) -> "File":
+    def load(cls, path: str, mmap: bool = True) -> "File":
         with open(path, "rb") as f:
+            magic = f.read(len(_SPILL_MAGIC))
+            if magic != _SPILL_MAGIC:
+                f.seek(0)
+                return cls._load_legacy(f)
             hlen = int.from_bytes(f.read(8), "little")
             meta = json.loads(f.read(hlen).decode())
-            npz = np.load(io.BytesIO(f.read()))
+            data_start = _align_up(len(_SPILL_MAGIC) + 8 + hlen)
+            out = cls(meta["filename"])
+            out.attrs.update(meta.get("attrs") or {})
+            for dpath, info in meta["datasets"].items():
+                dt = np.dtype(info["dtype"])
+                shape = tuple(info["shape"])
+                nbytes = int(info["nbytes"])
+                off = data_start + int(info["offset"])
+                if nbytes == 0:
+                    arr = np.zeros(shape, dtype=dt)
+                elif mmap:
+                    mm = np.memmap(path, dtype=dt, mode="r", offset=off,
+                                   shape=shape if shape else (1,))
+                    arr = mm if shape else mm.reshape(())
+                else:
+                    f.seek(off)
+                    buf = f.read(nbytes)
+                    _TRANSPORT_STATS.record_copy(nbytes)
+                    arr = np.frombuffer(bytearray(buf), dtype=dt).reshape(shape)
+                ds = out.create_dataset(dpath, data=arr, copy=False)
+                ds.attrs.update(info.get("attrs") or {})
+                own = info.get("ownership")
+                if own:
+                    bo = BlockOwnership()
+                    for r, (s, sh) in own.items():
+                        bo.add(int(r), s, sh)
+                    ds.ownership = bo
+            return out
+
+    @classmethod
+    def _load_legacy(cls, f) -> "File":
+        # pre-raw-container format: u64 header length + json + npz blob
+        hlen = int.from_bytes(f.read(8), "little")
+        meta = json.loads(f.read(hlen).decode())
+        npz = np.load(io.BytesIO(f.read()))
         out = cls(meta["filename"])
         for dpath, info in meta["datasets"].items():
-            ds = out.create_dataset(dpath, data=npz[info["key"]])
+            ds = out.create_dataset(dpath, data=npz[info["key"]], copy=False)
             ds.attrs.update(info.get("attrs") or {})
             own = info.get("ownership")
             if own:

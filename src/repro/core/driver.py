@@ -104,6 +104,10 @@ class Wilkins:
     record_events: keep per-channel event timelines (Gantt / Fig. 5).
     max_restarts:  per-instance restart budget on task failure (fault tolerance).
     action_dirs:   extra directories to search for custom action scripts.
+    zero_copy:     transport fast path (default True): channels ship CoW
+                   dataset views and fan-out shares one filtered payload.
+                   False restores the legacy materialize-per-channel copies
+                   (the benchmark baseline).  See DESIGN.md.
     """
 
     def __init__(
@@ -115,6 +119,7 @@ class Wilkins:
         record_events: bool = False,
         max_restarts: int = 0,
         action_dirs: Sequence[str] = (),
+        zero_copy: bool = True,
     ):
         self.graph = config if isinstance(config, WorkflowGraph) else WorkflowGraph.from_yaml(config)
         self.funcs = dict(funcs)
@@ -125,6 +130,7 @@ class Wilkins:
         self.record_events = record_events
         self.max_restarts = max_restarts
         self.action_dirs = list(action_dirs)
+        self.zero_copy = zero_copy
 
         self.device_groups = self._partition_devices(devices)
         self.channels: List[Channel] = []
@@ -175,6 +181,8 @@ class Wilkins:
                     io_freq=edge.io_freq,
                     spill_dir=self.spill_dir,
                     record_events=self.record_events,
+                    queue_depth=edge.queue_depth,
+                    zero_copy=self.zero_copy,
                 )
                 self.channels.append(ch)
 

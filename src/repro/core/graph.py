@@ -53,7 +53,9 @@ class DsetSpec:
 class Port:
     filename: str
     dsets: List[DsetSpec]
-    io_freq: int = 1  # flow control (inports only)
+    io_freq: int = 1      # flow control (inports only)
+    queue_depth: int = 1  # channel ring-queue depth (inports only); 1 = paper
+                          # rendezvous, >=2 pipelines producer ahead of consumer
 
 
 @dataclass
@@ -82,6 +84,7 @@ class Edge:
     dset_patterns: List[str]    # consumer dataset selections that matched
     mode: str                   # "memory" | "file"
     io_freq: int = 1
+    queue_depth: int = 1
 
     def instance_links(self, np_: int, nc: int) -> List[Tuple[int, int]]:
         """Round-robin instance pairing over the longer list (paper Fig. 3)."""
@@ -100,7 +103,11 @@ def _parse_port(p: Dict[str, Any]) -> Port:
     ]
     if not dsets:
         dsets = [DsetSpec(name="*")]
-    return Port(filename=p["filename"], dsets=dsets, io_freq=int(p.get("io_freq", 1)))
+    qd = int(p.get("queue_depth", 1))
+    if qd < 1:
+        raise ValueError(f"queue_depth must be >= 1, got {qd}")
+    return Port(filename=p["filename"], dsets=dsets,
+                io_freq=int(p.get("io_freq", 1)), queue_depth=qd)
 
 
 def _parse_task(t: Dict[str, Any]) -> TaskSpec:
@@ -178,6 +185,7 @@ class WorkflowGraph:
                                     dset_patterns=matched,
                                     mode=mode,
                                     io_freq=inp.io_freq,
+                                    queue_depth=inp.queue_depth,
                                 )
                             )
         return edges

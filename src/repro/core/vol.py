@@ -27,8 +27,8 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from .channel import Channel
-from .datamodel import File, match_file
+from .channel import NO_DATA, Channel, ChannelMux
+from .datamodel import File
 
 __all__ = ["VOL", "current_vol", "push_vol", "pop_vol"]
 
@@ -123,9 +123,14 @@ class VOL:
 
         Flow control happens inside ``Channel.offer`` -- a skip there is not an
         error, it is the strategy working as intended.
+
+        A per-file payload cache is shared across the fan-out: every channel
+        with the same dataset selection ships a CoW view over ONE filtered
+        payload instead of materializing its own copy (zero-copy fast path).
         """
         n = 0
         for f in list(self._unserved):
+            payload_cache: Dict[Any, File] = {}
             for ch in self.outgoing:
                 if not ch.matches_file(f.filename):
                     continue
@@ -133,7 +138,7 @@ class VOL:
                     continue
                 if ch.mode == "file" and not file:
                     continue
-                if ch.offer(f):
+                if ch.offer(f, _payload_cache=payload_cache):
                     n += 1
         return n
 
@@ -166,32 +171,44 @@ class VOL:
             self.clear_files()
 
     def on_file_open(self, filename: str) -> Optional[File]:
-        """Consumer-side open: pull the next version from a matching channel."""
+        """Consumer-side open: pull the next version from a matching channel.
+
+        A consumer port may aggregate several producer instances (fan-in).
+        All matching channels are multiplexed over one condition variable
+        (``ChannelMux``): the consumer scans non-blockingly, then sleeps until
+        ANY channel serves or finishes -- no polling loop.  The version-token
+        handshake (token taken *before* the scan) makes a serve that lands
+        between scan and wait impossible to miss.
+        """
         self._fire("before_file_open", filename)
         chans = [c for c in self.incoming if c.matches_file(filename)]
         if not chans:
             return None  # not intercepted -> caller falls back to standalone
-        # A consumer port may aggregate several producer instances (fan-in):
-        # take the next available file, round-robin over its channels.
-        while True:
-            live = [c for c in chans if not c.is_done()]
-            if not live:
-                return None  # all producers report all-done (query protocol)
-            for c in live:
-                if c.peek_pending():
-                    f = c.get(timeout=0.05)
-                    if f is not None:
-                        self._fire("after_file_open", f)
-                        return f
-            # nothing pending: block on the single live channel case,
-            # otherwise poll (multi-producer fan-in).
-            if len(live) == 1:
-                f = live[0].get()
-                if f is None:
-                    return None
-                self._fire("after_file_open", f)
-                return f
-            time.sleep(0.001)
+        mux = ChannelMux()
+        for c in chans:
+            c.add_listener(mux)
+            # advertise the blocked consumer so `latest` producers serve us
+            c.set_consumer_waiting(True)
+        t0 = time.monotonic()
+        try:
+            while True:
+                token = mux.token()
+                any_live = False
+                for c in chans:
+                    r = c.try_get()
+                    if r is NO_DATA:
+                        any_live = True
+                    elif r is not None:
+                        c.stats.consumer_wait_s += time.monotonic() - t0
+                        self._fire("after_file_open", r)
+                        return r
+                if not any_live:
+                    return None  # all producers report all-done (query protocol)
+                mux.wait(token)
+        finally:
+            for c in chans:
+                c.set_consumer_waiting(False)
+                c.remove_listener(mux)
 
     def on_dataset_write(self, ds) -> None:
         self.dataset_write_counter += 1

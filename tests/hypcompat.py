@@ -1,0 +1,49 @@
+"""Optional-hypothesis shim for the test suite.
+
+The container image does not ship ``hypothesis`` and the environment forbids
+installing it.  Property-based tests import ``given``/``settings``/``st`` from
+here: with hypothesis present they run normally; without it they are skipped
+(instead of erroring the whole collection, which killed the tier-1 run).
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    class _StrategyStub:
+        """Accepts any strategy construction chain without doing anything."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, _name):
+            return self
+
+        def map(self, *_a, **_k):
+            return self
+
+        def filter(self, *_a, **_k):
+            return self
+
+    class _St:
+        def __getattr__(self, _name):
+            return _StrategyStub()
+
+    st = _St()
