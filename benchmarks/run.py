@@ -8,13 +8,18 @@
   nucleation   -> paper Fig. 10 (materials-science NxN ensemble, nwriters=1)
   cosmo        -> paper Table 3 (Nyx+Reeber, custom actions + io_freq sweep)
   transport    -> zero-copy fast path (CoW fan-out, mmap spill, queue_depth)
+  redistribute -> M->N planned transport (plan cache, slab shipping, aligned
+                  fast path, Pallas pack executor)
   roofline     -> §Roofline table from the dry-run grid (not a paper artifact)
 
-``--smoke`` is the tier-1 entry point: it runs the pytest suite and then a
-small transport bench, and fails if either fails.
+``--smoke`` is the tier-1 entry point: it runs the pytest suite, a small
+transport bench, and a small redistribution bench, and fails if any fails
+(gates: fan-out copy reduction >= 2x, M->N bytes-shipped reduction >= 2x,
+plan-cache hit rate >= 0.9).
 
 Every benchmark prints ``name,value,unit,derived`` CSV rows; the transport
-bench additionally writes machine-readable ``BENCH_transport.json``.
+and redistribution benches additionally write machine-readable
+``BENCH_transport.json`` / ``BENCH_redistribute.json``.
 """
 
 from __future__ import annotations
@@ -27,7 +32,7 @@ import time
 import traceback
 
 SUITES = ("overhead", "flowcontrol", "ensembles", "nucleation", "cosmo",
-          "transport", "roofline")
+          "transport", "redistribute", "roofline")
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -51,7 +56,19 @@ def _smoke() -> int:
     results = bench_transport.main(smoke=True)
     ratio = results["fanout"]["copy_reduction_x"]
     print(f"==== smoke: copy_reduction={ratio:.1f}x ====", flush=True)
-    return 0 if ratio >= 2.0 else 1
+    if ratio < 2.0:
+        return 1
+    print("==== smoke: bench_redistribute ====", flush=True)
+    from . import bench_redistribute
+    rr = bench_redistribute.main(smoke=True)
+    shipped = rr["mxn"]["bytes_reduction_x"]
+    hit_rate = rr["mxn"]["plan_cache_hit_rate"]
+    aligned_copied = rr["aligned"]["transport_bytes_copied"]
+    print(f"==== smoke: redistribute bytes_reduction={shipped:.1f}x "
+          f"plan_cache_hit_rate={hit_rate:.2f} "
+          f"aligned_bytes_copied={aligned_copied} ====", flush=True)
+    ok = shipped >= 2.0 and hit_rate >= 0.9 and aligned_copied == 0
+    return 0 if ok else 1
 
 
 def main() -> int:

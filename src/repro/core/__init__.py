@@ -16,6 +16,8 @@ from .comm import TaskComm, world
 from .datamodel import BlockOwnership, Dataset, File, Group
 from .driver import TaskFailure, Wilkins, WorkflowReport
 from .graph import DsetSpec, Edge, Port, TaskSpec, WorkflowGraph
+from .redistribute import (CompiledPlan, PlanCache, RedistSpec, plan_cache,
+                           reset_plan_cache)
 from .vol import VOL, current_vol
 
 __all__ = [
@@ -42,6 +44,11 @@ __all__ = [
     "Port",
     "TaskSpec",
     "WorkflowGraph",
+    "CompiledPlan",
+    "PlanCache",
+    "RedistSpec",
+    "plan_cache",
+    "reset_plan_cache",
     "VOL",
     "current_vol",
 ]

@@ -46,8 +46,9 @@ from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .datamodel import (File, compile_file_pattern, compile_path_pattern,
-                        transport_stats)
+from .datamodel import (BlockOwnership, File, compile_file_pattern,
+                        compile_path_pattern, transport_stats)
+from .redistribute import RedistSpec, plan_cache
 
 __all__ = [
     "FlowControl",
@@ -97,6 +98,11 @@ class FlowControl:
         raise ValueError(f"invalid io_freq {io_freq}")
 
 
+#: default ring size for per-channel event timelines (satellite: bounded so
+#: ``record_events=True`` cannot grow memory without limit on long runs)
+EVENTS_MAXLEN = 4096
+
+
 @dataclass
 class ChannelStats:
     served: int = 0
@@ -104,7 +110,11 @@ class ChannelStats:
     bytes_moved: int = 0
     producer_wait_s: float = 0.0
     consumer_wait_s: float = 0.0
-    events: List[Tuple[float, str, str]] = field(default_factory=list)  # (t, who, what)
+    # (t, who, what) ring: oldest events roll off past the maxlen, counted
+    # in ``events_dropped`` so Gantt consumers know the timeline is truncated
+    events: Deque[Tuple[float, str, str]] = field(
+        default_factory=lambda: deque(maxlen=EVENTS_MAXLEN))
+    events_dropped: int = 0
 
 
 class ChannelMux:
@@ -154,6 +164,8 @@ class Channel:
         record_events: bool = False,
         queue_depth: int = 1,
         zero_copy: bool = True,
+        redistribute: Optional[RedistSpec] = None,
+        events_maxlen: int = EVENTS_MAXLEN,
     ):
         self.name = name
         self.producer = producer
@@ -169,10 +181,14 @@ class Channel:
             raise ValueError(f"queue_depth must be >= 1, got {queue_depth}")
         self.queue_depth = int(queue_depth)
         self.zero_copy = bool(zero_copy)
+        self.redistribute = redistribute
 
         # precompiled matchers (LRU-cached globally, pinned here for the hot path)
         self._file_matcher = compile_file_pattern(filename_pattern)
         self._dset_matchers = [compile_path_pattern(p) for p in self.dset_patterns]
+        # filename -> bool memo: the reverse compile in matches_file otherwise
+        # runs on every serve/open for every non-matching filename
+        self._match_cache: Dict[str, bool] = {}
 
         self._lock = threading.Condition()
         self._queue: Deque[Tuple[str, Any]] = deque()  # bounded ring (queue_depth)
@@ -181,12 +197,15 @@ class Channel:
         self._close_count = 0
         self._spill_seq = 0
         self._listeners: List[ChannelMux] = []
-        self.stats = ChannelStats()
+        self.stats = ChannelStats(events=deque(maxlen=int(events_maxlen)))
 
     # ------------------------------------------------------------------ util
     def _event(self, who: str, what: str) -> None:
         if self.record_events:
-            self.stats.events.append((time.monotonic(), who, what))
+            ev = self.stats.events
+            if ev.maxlen is not None and len(ev) == ev.maxlen:
+                self.stats.events_dropped += 1
+            ev.append((time.monotonic(), who, what))
 
     def add_listener(self, mux: ChannelMux) -> None:
         with self._lock:
@@ -206,22 +225,36 @@ class Channel:
             mux.notify()
 
     def matches_file(self, filename: str) -> bool:
-        # bidirectional: either side's pattern may be the more general one
-        return self._file_matcher.matches(filename) or compile_file_pattern(
-            filename
-        ).matches(self.filename_pattern)
+        # bidirectional: either side's pattern may be the more general one.
+        # Memoized per channel: every serve/open probes every channel, and the
+        # reverse compile would otherwise run each time for non-matches.
+        hit = self._match_cache.get(filename)
+        if hit is None:
+            hit = self._file_matcher.matches(filename) or compile_file_pattern(
+                filename
+            ).matches(self.filename_pattern)
+            if len(self._match_cache) < 4096:  # bound pathological filename churn
+                self._match_cache[filename] = hit
+        return hit
 
     def filter_file(self, f: File) -> File:
         """Data-centric selection: ship only the datasets this port asked for.
 
-        Zero-copy mode grafts CoW views; legacy mode materializes a private
-        copy per dataset (the seed's per-channel deep-copy behaviour).
+        Zero-copy mode grafts CoW views; a port with declared M->N ownership
+        (``redistribute``) consults the plan cache and ships only this
+        consumer instance's owned slab of each dataset.  Legacy mode
+        materializes a private copy per dataset (the seed's per-channel
+        deep-copy behaviour).
         """
         out = File(f.filename)
         out.attrs.update(f.attrs)
         for ds in f.visit_datasets():
             if any(m.matches(ds.path) for m in self._dset_matchers):
-                if self.zero_copy:
+                if self.redistribute is not None:
+                    # the slab contract holds in legacy mode too (the copy is
+                    # eager there instead of CoW-deferred)
+                    self._attach_redistributed(out, ds)
+                elif self.zero_copy:
                     out.attach_view(ds)
                 else:
                     buf = np.array(ds.read_direct())  # eager materialization
@@ -230,6 +263,71 @@ class Channel:
                     nd.attrs.update(ds.attrs)
                     nd.ownership = ds.ownership
         return out
+
+    def _attach_redistributed(self, out: File, ds) -> None:
+        """Attach only this consumer instance's owned blocks of ``ds``.
+
+        The M->N plan (src = the dataset's producer BlockOwnership, dst = the
+        port-declared consumer decomposition) comes from the process-wide
+        ``PlanCache`` -- the O(M*N) intersection runs once per shape/ownership
+        key, not per step.  Two fast paths:
+
+        * aligned decompositions (every dst block == one src block) ship a
+          whole-dataset CoW view -- zero bytes *copied*, no rearrangement;
+          the payload bytes (what a wire would carry rank-to-rank) still
+          count as shipped;
+        * otherwise the instance's union box ships as a CoW ``slab_view``
+          (still zero copies in-process; the slab's nbytes is what would
+          cross the wire) with per-rank dst blocks as its ownership map.
+
+        Legacy (``zero_copy=False``) channels honor the same contract with
+        eager copies: the consumer still receives only its owned slab, with
+        the same attrs and ownership map.
+        """
+        spec = self.redistribute
+        shape = ds.shape
+        if not shape or spec.axis >= len(shape):
+            out.attach_view(ds)  # scalars / axis mismatch: no decomposition
+            return
+        if ds.ownership is not None and ds.ownership.blocks:
+            src = [ds.ownership.blocks[r] for r in sorted(ds.ownership.blocks)]
+        else:
+            src = [((0,) * len(shape), shape)]  # unowned: one global block
+        dst, slot_boxes = spec.dst_boxes(shape)
+        plan = plan_cache().get(src, dst, shape, ds.dtype)
+
+        my_ranks = spec.my_ranks()
+        planned = plan.dst_bytes(my_ranks)
+        own = BlockOwnership()
+        for local, r in enumerate(my_ranks):
+            own.add(local, dst[r][0], dst[r][1])
+
+        stats = transport_stats()
+        if plan.aligned and spec.nslots == 1:
+            if self.zero_copy:
+                v = out.attach_view(ds)
+            else:
+                buf = np.array(ds.read_direct())
+                stats.record_copy(buf.nbytes)
+                v = out.create_dataset(ds.path, data=buf, copy=False)
+                v.attrs.update(ds.attrs)
+            v.ownership = own
+            stats.record_redistribution(planned, ds.nbytes, ds.nbytes,
+                                        aligned=True)
+            return
+        box_starts, box_shape = slot_boxes[spec.slot]
+        if self.zero_copy:
+            v = out.attach_slab(ds, box_starts, box_shape)
+        else:
+            slc = tuple(slice(s, s + n) for s, n in zip(box_starts, box_shape))
+            buf = np.array(ds.read_direct()[slc])
+            stats.record_copy(buf.nbytes)
+            v = out.create_dataset(ds.path, data=buf, copy=False)
+            v.attrs.update(ds.attrs)
+        v.ownership = own
+        v.attrs["redist_global_shape"] = list(shape)
+        v.attrs["redist_box_starts"] = list(box_starts)
+        stats.record_redistribution(planned, v.nbytes, ds.nbytes, aligned=False)
 
     # ------------------------------------------------------------- producer
     def offer(self, f: File, _payload_cache: Optional[Dict[Any, File]] = None) -> bool:
@@ -257,7 +355,7 @@ class Channel:
                 self._event("producer", "skip_latest")
                 return False
 
-        payload = self._prepare(f, _payload_cache)
+        payload, payload_bytes = self._prepare(f, _payload_cache)
         t0 = time.monotonic()
         with self._lock:
             self._event("producer", "wait_begin")
@@ -269,15 +367,24 @@ class Channel:
                 return False
             self._queue.append(payload)
             self.stats.served += 1
-            self.stats.bytes_moved += f.total_bytes()
+            self.stats.bytes_moved += payload_bytes
             self._event("producer", "serve")
             self._lock.notify_all()
         self._notify_listeners()
         return True
 
-    def _prepare(self, f: File, cache: Optional[Dict[Any, File]] = None) -> Tuple[str, Any]:
+    def _prepare(
+        self, f: File, cache: Optional[Dict[Any, File]] = None
+    ) -> Tuple[Tuple[str, Any], int]:
+        """Build this channel's payload; returns (queue item, payload bytes).
+
+        The fan-out payload cache key includes the redistribution spec: two
+        consumer instances of an M->N port own *different* slabs, so only
+        channels with the same selection AND the same owned blocks may share
+        one filtered payload.
+        """
         if self.zero_copy:
-            key = tuple(self.dset_patterns)
+            key = (tuple(self.dset_patterns), self.redistribute)
             base = cache.get(key) if cache is not None else None
             if base is None:
                 base = self.filter_file(f)
@@ -286,6 +393,7 @@ class Channel:
             sub = base.view()  # per-channel tree, shared buffers
         else:
             sub = self.filter_file(f)
+        payload_bytes = sub.total_bytes()
         if self.mode == "file":
             # Spill through "disk" -- the paper's ``file: 1`` transport path.
             # One container per served step so queued (queue_depth > 1) and
@@ -295,8 +403,8 @@ class Channel:
                 self._spill_seq += 1
             base_name = f"{os.path.basename(f.filename)}.{_sanitize(self.name)}.{seq:06d}"
             path = sub.save(self.spill_dir, basename=base_name)
-            return ("file", path)
-        return ("memory", sub)
+            return ("file", path), payload_bytes
+        return ("memory", sub), payload_bytes
 
     def finish(self) -> None:
         """Producer signals all-done (query protocol: empty filename list)."""

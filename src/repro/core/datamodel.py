@@ -86,6 +86,18 @@ class TransportStats:
         self.bytes_copied = 0
         self.cow_copies = 0
         self.views = 0
+        # M->N redistribution accounting (planned vs shipped vs whole-file):
+        # per served dataset on a redistributing port, ``planned`` is what the
+        # compiled plan says must land on this consumer, ``shipped`` the
+        # payload bytes the channel actually enqueued (the slab -- or the
+        # whole dataset on the aligned view path, which copies nothing but
+        # whose bytes a real wire would still carry), ``baseline`` the
+        # whole-dataset bytes the pre-plan transport moved.
+        self.redist_planned_bytes = 0
+        self.redist_shipped_bytes = 0
+        self.redist_baseline_bytes = 0
+        self.redist_aligned = 0
+        self.redist_slabs = 0
 
     def record_copy(self, nbytes: int, cow: bool = False) -> None:
         with self._lock:
@@ -98,6 +110,17 @@ class TransportStats:
         with self._lock:
             self.views += 1
 
+    def record_redistribution(self, planned: int, shipped: int, baseline: int,
+                              aligned: bool) -> None:
+        with self._lock:
+            self.redist_planned_bytes += int(planned)
+            self.redist_shipped_bytes += int(shipped)
+            self.redist_baseline_bytes += int(baseline)
+            if aligned:
+                self.redist_aligned += 1
+            else:
+                self.redist_slabs += 1
+
     def snapshot(self) -> Dict[str, int]:
         with self._lock:
             return {
@@ -105,11 +128,19 @@ class TransportStats:
                 "bytes_copied": self.bytes_copied,
                 "cow_copies": self.cow_copies,
                 "views": self.views,
+                "redist_planned_bytes": self.redist_planned_bytes,
+                "redist_shipped_bytes": self.redist_shipped_bytes,
+                "redist_baseline_bytes": self.redist_baseline_bytes,
+                "redist_aligned": self.redist_aligned,
+                "redist_slabs": self.redist_slabs,
             }
 
     def reset(self) -> None:
         with self._lock:
             self.copies = self.bytes_copied = self.cow_copies = self.views = 0
+            self.redist_planned_bytes = self.redist_shipped_bytes = 0
+            self.redist_baseline_bytes = 0
+            self.redist_aligned = self.redist_slabs = 0
 
 
 _TRANSPORT_STATS = TransportStats()
@@ -293,6 +324,31 @@ class Dataset:
         _TRANSPORT_STATS.record_view()
         return ds
 
+    def slab_view(self, starts: Sequence[int], shape: Sequence[int],
+                  parent: Optional["Group"] = None) -> "Dataset":
+        """Zero-copy hyperslab view: a Dataset over ``self._data[starts:+shape]``.
+
+        Shares this dataset's ``_Share`` (like ``view``), so the CoW rules
+        hold: the slab is read-only while shared and a first write through
+        either side copies only that side's bytes (the slab copies its slab,
+        not the whole buffer).  This is what a redistributing channel ships --
+        the consumer's owned box, zero bytes moved at serve time.
+        """
+        slc = tuple(slice(s, s + n) for s, n in zip(starts, shape))
+        ds = Dataset.__new__(Dataset)
+        ds.name = self.name
+        ds.shape = tuple(int(n) for n in shape)
+        ds.dtype = self.dtype
+        ds.attrs = dict(self.attrs)
+        ds.parent = parent
+        ds.ownership = None
+        with self._share.lock:
+            self._share.count += 1
+        ds._share = self._share
+        ds._data = self._data[slc]
+        _TRANSPORT_STATS.record_view()
+        return ds
+
     @property
     def share_count(self) -> int:
         return self._share.count
@@ -411,6 +467,15 @@ class Group:
         comps = split_path(ds.path)
         parent = self.require_group("/".join(comps[:-1])) if len(comps) > 1 else self
         v = ds.view(parent=parent)
+        parent.children[comps[-1]] = v
+        return v
+
+    def attach_slab(self, ds: Dataset, starts: Sequence[int],
+                    shape: Sequence[int]) -> Dataset:
+        """Graft a zero-copy hyperslab view of ``ds`` at the same path."""
+        comps = split_path(ds.path)
+        parent = self.require_group("/".join(comps[:-1])) if len(comps) > 1 else self
+        v = ds.slab_view(starts, shape, parent=parent)
         parent.children[comps[-1]] = v
         return v
 

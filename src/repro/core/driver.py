@@ -33,6 +33,7 @@ from . import actions as actions_mod
 from .channel import Channel
 from .comm import TaskComm, pop_comm, push_comm
 from .graph import WorkflowGraph
+from .redistribute import RedistSpec
 from .vol import VOL, pop_vol, push_vol
 
 __all__ = ["Wilkins", "WorkflowReport", "TaskFailure"]
@@ -171,6 +172,18 @@ class Wilkins:
             ptask = self.graph.tasks[edge.producer]
             ctask = self.graph.tasks[edge.consumer]
             for pi, ci in edge.instance_links(ptask.task_count, ctask.task_count):
+                # M->N redistribution: an inport with declared ownership gets
+                # a RedistSpec describing which blocks THIS consumer instance
+                # (and its logical ranks / subset writers) owns; the channel
+                # consults the plan cache and ships only those blocks.
+                redist = None
+                if edge.redistribute:
+                    redist = RedistSpec(
+                        axis=edge.redist_axis,
+                        nslots=ctask.task_count,
+                        slot=ci,
+                        nranks=ctask.io_procs,
+                    )
                 ch = Channel(
                     name=f"{edge.producer}[{pi}]->{edge.consumer}[{ci}]:{edge.filename_pattern}",
                     producer=(edge.producer, pi),
@@ -183,6 +196,7 @@ class Wilkins:
                     record_events=self.record_events,
                     queue_depth=edge.queue_depth,
                     zero_copy=self.zero_copy,
+                    redistribute=redist,
                 )
                 self.channels.append(ch)
 
@@ -288,8 +302,14 @@ class Wilkins:
                 threads.append(th)
         for th in threads:
             th.start()
+        # One global deadline across ALL joins: a per-thread timeout would let
+        # a hung workflow take N_threads x timeout to fail.
+        deadline = None if timeout is None else time.monotonic() + timeout
         for th in threads:
-            th.join(timeout=timeout)
+            remaining = None
+            if deadline is not None:
+                remaining = max(0.0, deadline - time.monotonic())
+            th.join(timeout=remaining)
             if th.is_alive():
                 raise TimeoutError(f"task thread {th.name} did not finish")
         report.wall_time_s = time.monotonic() - t0

@@ -56,6 +56,11 @@ class Port:
     io_freq: int = 1      # flow control (inports only)
     queue_depth: int = 1  # channel ring-queue depth (inports only); 1 = paper
                           # rendezvous, >=2 pipelines producer ahead of consumer
+    redistribute: bool = False  # M->N planning on this inport: the consumer's
+                                # instances/ranks own a decomposition of every
+                                # matched dataset and the channel ships only
+                                # the owned blocks (paper §3.2.2 / LowFive)
+    redist_axis: int = 0        # decomposition axis of the owned blocks
 
 
 @dataclass
@@ -85,6 +90,8 @@ class Edge:
     mode: str                   # "memory" | "file"
     io_freq: int = 1
     queue_depth: int = 1
+    redistribute: bool = False  # consumer inport declared M->N ownership
+    redist_axis: int = 0
 
     def instance_links(self, np_: int, nc: int) -> List[Tuple[int, int]]:
         """Round-robin instance pairing over the longer list (paper Fig. 3)."""
@@ -106,8 +113,19 @@ def _parse_port(p: Dict[str, Any]) -> Port:
     qd = int(p.get("queue_depth", 1))
     if qd < 1:
         raise ValueError(f"queue_depth must be >= 1, got {qd}")
+    # ``redistribute: 1`` or ``redistribute: {axis: A}`` on a consumer inport
+    redist = p.get("redistribute", 0)
+    axis = 0
+    if isinstance(redist, dict):
+        axis = int(redist.get("axis", 0))
+        redist = True
+    else:
+        redist = bool(int(redist or 0))
+    if axis < 0:
+        raise ValueError(f"redistribute axis must be >= 0, got {axis}")
     return Port(filename=p["filename"], dsets=dsets,
-                io_freq=int(p.get("io_freq", 1)), queue_depth=qd)
+                io_freq=int(p.get("io_freq", 1)), queue_depth=qd,
+                redistribute=redist, redist_axis=axis)
 
 
 def _parse_task(t: Dict[str, Any]) -> TaskSpec:
@@ -186,6 +204,8 @@ class WorkflowGraph:
                                     mode=mode,
                                     io_freq=inp.io_freq,
                                     queue_depth=inp.queue_depth,
+                                    redistribute=inp.redistribute,
+                                    redist_axis=inp.redist_axis,
                                 )
                             )
         return edges

@@ -4,23 +4,37 @@ A producer running M (logical) ranks owns a dataset as M hyperslab blocks; a
 consumer running N ranks wants it as N blocks.  LowFive plans which pieces of
 which producer block each consumer rank needs and moves exactly those bytes.
 We reproduce that planner (pure index arithmetic, testable to the byte) plus
-two executors:
+the executors the transport hot path runs:
 
-* numpy executor  -- used by the host-side workflow runtime and the paper's
-  synthetic benchmarks;
-* JAX executor    -- resharding a ``jax.Array`` from the producer task's mesh
-  layout onto the consumer task's mesh (``device_put`` with a target
-  ``NamedSharding``; on a real pod XLA turns this into ICI transfers, the
-  interconnect path of the paper).
+* ``CompiledPlan``   -- a plan compiled once into per-dst *coalesced* slab
+  descriptors (adjacent transfers merged into contiguous runs) with an
+  aligned-boundary detector: when every dst block coincides with exactly one
+  src block the exchange degenerates to CoW views (zero bytes copied).
+* ``PlanCache``      -- process-wide LRU keyed on (src blocks, dst blocks,
+  shape, dtype); steady-state steps re-plan nothing (metadata is per-shape,
+  not per-step).  ``Channel`` consults it on every served dataset.
+* scatter executor   -- ``CompiledPlan.execute`` writes straight into
+  preallocated per-rank destination blocks from per-rank source blocks; no
+  global-array materialization, one numpy slice copy per coalesced run.
+* JAX pack executor  -- ``execute_pack_jax`` lowers a cached plan's row runs
+  to ``kernels.pack.pack_blocks`` scalar-prefetch DMA tiles (interpret mode
+  on CPU, Mosaic on TPU) for device-resident reshard.
+* ``reshard_jax``    -- resharding a ``jax.Array`` from the producer task's
+  mesh layout onto the consumer task's mesh (``device_put`` with a target
+  ``NamedSharding``; on a real pod XLA turns this into ICI transfers).
 
 Subset writers (paper §3.2.2): ``gather_to_writers`` collapses an M-block
 ownership onto the first k ranks, reproducing the LAMMPS rank-0 gather.
+``RedistSpec`` is the per-channel declaration (decomposition axis + rank
+counts from the consumer's YAML) the driver wires from the workflow graph.
 """
 
 from __future__ import annotations
 
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -31,7 +45,16 @@ __all__ = [
     "intersect",
     "Transfer",
     "plan_redistribution",
+    "coalesce_transfers",
+    "CompiledPlan",
+    "PlanCache",
+    "plan_cache",
+    "reset_plan_cache",
+    "RedistSpec",
     "redistribute_numpy",
+    "redistribute_cached",
+    "execute_pack_jax",
+    "execute_pack_jax_all",
     "gather_to_writers",
     "reshard_jax",
 ]
@@ -97,6 +120,355 @@ def plan_redistribution(src: Sequence[Box], dst: Sequence[Box]) -> List[Transfer
     return out
 
 
+def coalesce_transfers(
+    transfers: Sequence[Transfer], ignore_src: bool = False
+) -> List[Transfer]:
+    """Merge transfers that tile contiguously along one axis into single runs.
+
+    By default only transfers with the same (src_rank, dst_rank) merge -- the
+    scatter executor reads per-src-rank local blocks, so a run must stay
+    inside one source block.  With ``ignore_src=True`` runs merge *across*
+    source ranks (merged runs carry ``src_rank=-1``): the global-buffer
+    executor reads one stitched array, so a dst block fed by k adjacent
+    producer blocks collapses to one slice copy.  Merging is greedy over the
+    start-sorted list: two boxes merge when they agree on every axis except
+    one, where they abut.
+    """
+    out: List[Transfer] = []
+    for t in sorted(transfers, key=lambda t: (t.dst_rank, t.global_starts, t.src_rank)):
+        if out:
+            p = out[-1]
+            if p.dst_rank == t.dst_rank and (ignore_src or p.src_rank == t.src_rank):
+                diff = [
+                    a
+                    for a in range(len(t.shape))
+                    if p.global_starts[a] != t.global_starts[a]
+                    or p.shape[a] != t.shape[a]
+                ]
+                if len(diff) == 1:
+                    a = diff[0]
+                    if (
+                        p.global_starts[a] + p.shape[a] == t.global_starts[a]
+                        and all(p.shape[b] == t.shape[b] for b in range(len(t.shape)) if b != a)
+                    ):
+                        merged = tuple(
+                            p.shape[b] + t.shape[b] if b == a else p.shape[b]
+                            for b in range(len(t.shape))
+                        )
+                        rank = p.src_rank if p.src_rank == t.src_rank else -1
+                        out[-1] = Transfer(rank, p.dst_rank, p.global_starts, merged)
+                        continue
+        out.append(t)
+    return out
+
+
+class CompiledPlan:
+    """A redistribution plan compiled once for a (src, dst, shape, dtype) key.
+
+    ``per_dst[r]`` holds dst rank r's per-source slab descriptors (what the
+    scatter executor copies out of each producer block); ``per_dst_runs[r]``
+    holds the same bytes *coalesced across source ranks* into contiguous runs
+    (what the global-buffer executor and the pack-kernel lowering walk -- a
+    dst block fed by k adjacent producer blocks is one run, one copy).
+    ``aligned`` marks the degenerate exchange where every dst block coincides
+    with exactly one src block (boundaries line up), so the transport can
+    ship CoW views with zero bytes copied instead of executing any transfer.
+    """
+
+    __slots__ = ("src", "dst", "shape", "dtype", "per_dst", "per_dst_runs",
+                 "transfers", "identity", "aligned", "nbytes_planned",
+                 "_pack_cache", "_pack_lock")
+
+    def __init__(self, src: Sequence[Box], dst: Sequence[Box],
+                 shape: Sequence[int], dtype: Any = np.float64):
+        self.src: Tuple[Box, ...] = tuple(src)
+        self.dst: Tuple[Box, ...] = tuple(dst)
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = np.dtype(dtype)
+        raw = plan_redistribution(self.src, self.dst)
+        per_dst: List[Tuple[Transfer, ...]] = []
+        per_dst_runs: List[Tuple[Transfer, ...]] = []
+        for dr in range(len(self.dst)):
+            mine = [t for t in raw if t.dst_rank == dr]
+            per_dst.append(tuple(coalesce_transfers(mine)))
+            per_dst_runs.append(tuple(coalesce_transfers(mine, ignore_src=True)))
+        self.per_dst: Tuple[Tuple[Transfer, ...], ...] = tuple(per_dst)
+        self.per_dst_runs: Tuple[Tuple[Transfer, ...], ...] = tuple(per_dst_runs)
+        self.transfers: Tuple[Transfer, ...] = tuple(
+            t for slabs in per_dst for t in slabs)
+        self.identity = self.src == self.dst
+        self.aligned = self.identity or all(
+            len(slabs) <= 1
+            and all(
+                (t.global_starts, t.shape) == self.dst[dr]
+                and (t.global_starts, t.shape) == self.src[t.src_rank]
+                for t in slabs
+            )
+            for dr, slabs in enumerate(self.per_dst)
+        )
+        self.nbytes_planned = (
+            sum(t.nbytes_factor for t in self.transfers) * self.dtype.itemsize
+        )
+        self._pack_cache: Dict[Tuple[int, int], Tuple[np.ndarray, Tuple[Tuple[int, int], ...]]] = {}
+        self._pack_lock = threading.Lock()
+
+    # ------------------------------------------------------------- executors
+    def dst_bytes(self, ranks: Sequence[int]) -> int:
+        """Planned bytes landing on the given dst ranks."""
+        return sum(
+            t.nbytes_factor for r in ranks for t in self.per_dst[r]
+        ) * self.dtype.itemsize
+
+    def execute(
+        self,
+        src_blocks: Sequence[np.ndarray],
+        out: Optional[Sequence[np.ndarray]] = None,
+    ) -> List[np.ndarray]:
+        """Scatter per-src-rank blocks into per-dst-rank blocks.
+
+        ``src_blocks[r]`` is src rank r's local block (shape ``src[r][1]``).
+        Writes go straight into ``out`` (preallocated per-rank destination
+        blocks; allocated here if not given) -- the global array is never
+        materialized, and each coalesced run is one numpy slice copy.
+        """
+        if out is None:
+            out = [np.empty(sh, dtype=self.dtype) for (_, sh) in self.dst]
+        for dr, slabs in enumerate(self.per_dst):
+            dstarts = self.dst[dr][0]
+            for t in slabs:
+                sstarts = self.src[t.src_rank][0]
+                s_sl = tuple(
+                    slice(g - s, g - s + n)
+                    for g, s, n in zip(t.global_starts, sstarts, t.shape)
+                )
+                d_sl = tuple(
+                    slice(g - s, g - s + n)
+                    for g, s, n in zip(t.global_starts, dstarts, t.shape)
+                )
+                out[dr][d_sl] = src_blocks[t.src_rank][s_sl]
+        return list(out)
+
+    def execute_global(
+        self,
+        global_array: np.ndarray,
+        out: Optional[Sequence[np.ndarray]] = None,
+    ) -> List[np.ndarray]:
+        """Scatter from the stitched global array (the in-process transport
+        holds one buffer for all producer ranks) into per-dst-rank blocks.
+
+        Walks ``per_dst_runs``: transfers coalesced across source ranks, so a
+        dst block fed by k adjacent producer blocks is one slice copy."""
+        if out is None:
+            out = [np.empty(sh, dtype=global_array.dtype) for (_, sh) in self.dst]
+        for dr, slabs in enumerate(self.per_dst_runs):
+            dstarts = self.dst[dr][0]
+            for t in slabs:
+                g_sl = tuple(
+                    slice(s, s + n) for s, n in zip(t.global_starts, t.shape)
+                )
+                d_sl = tuple(
+                    slice(g - s, g - s + n)
+                    for g, s, n in zip(t.global_starts, dstarts, t.shape)
+                )
+                out[dr][d_sl] = global_array[g_sl]
+        return list(out)
+
+    # ----------------------------------------------------- pack-kernel lowering
+    def row_runs(self, dst_rank: int) -> List[Tuple[int, int]]:
+        """dst_rank's needed global rows as coalesced (start, count) runs.
+
+        Only valid for full-width row decompositions (2-D, every transfer
+        spanning all columns) -- the layout ``kernels.pack`` DMAs.
+        """
+        if len(self.shape) != 2:
+            raise ValueError(f"row_runs needs a 2-D plan, got shape {self.shape}")
+        cols = self.shape[1]
+        runs: List[Tuple[int, int]] = []
+        for t in self.per_dst_runs[dst_rank]:
+            if t.global_starts[1] != 0 or t.shape[1] != cols:
+                raise ValueError(
+                    f"pack lowering needs full-width row slabs, got {t}")
+            runs.append((t.global_starts[0], t.shape[0]))
+        return runs
+
+    def pack_tiles(
+        self, dst_rank: int, tile_rows: int = 8
+    ) -> Tuple[np.ndarray, Tuple[Tuple[int, int], ...]]:
+        """Lower dst_rank's row runs to pack-kernel tile offsets (cached).
+
+        Returns ``(tile_offsets, segments)``: the int32 source row-tile index
+        per output tile (the kernel's scalar-prefetch operand) and, per run,
+        ``(row_in_packed_output, row_count)`` to trim the tile padding back to
+        the exact rows.
+        """
+        key = (dst_rank, tile_rows)
+        with self._pack_lock:
+            hit = self._pack_cache.get(key)
+        if hit is not None:
+            return hit
+        tiles: List[int] = []
+        segs: List[Tuple[int, int]] = []
+        for start, cnt in self.row_runs(dst_rank):
+            t0 = start // tile_rows
+            t1 = -(-(start + cnt) // tile_rows)
+            segs.append((len(tiles) * tile_rows + (start - t0 * tile_rows), cnt))
+            tiles.extend(range(t0, t1))
+        result = (np.asarray(tiles, dtype=np.int32), tuple(segs))
+        with self._pack_lock:
+            self._pack_cache[key] = result
+        return result
+
+
+def _pad_rows_to_tiles(src, tile_rows: int):
+    """Pad the (R, C) buffer so R is a tile_rows multiple (one copy, reused
+    across every dst rank's gather -- the kernel then never re-pads)."""
+    import jax.numpy as jnp
+
+    pad = -src.shape[0] % tile_rows
+    return jnp.pad(src, ((0, pad), (0, 0))) if pad else src
+
+
+def execute_pack_jax(plan: CompiledPlan, dst_rank: int, src,
+                     tile_rows: int = 8):
+    """Device-resident reshard: gather dst_rank's rows with the Pallas pack
+    kernel (``kernels.pack.pack_blocks`` scalar-prefetch DMA tiles).
+
+    ``src`` is the (R, C) device buffer holding the global row space.  The
+    tile offsets come from the cached plan lowering (``plan.pack_tiles``);
+    ragged run boundaries are padded to tile granularity and trimmed back
+    here.  Gathering several dst ranks from one ragged buffer?  Use
+    ``execute_pack_jax_all`` so the pad copy happens once, not per rank.
+    Runs in interpret mode on CPU, Mosaic on TPU.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    tiles, segs = plan.pack_tiles(dst_rank, tile_rows)
+    if tiles.size == 0:
+        return jnp.zeros((0, plan.shape[1]), dtype=src.dtype)
+    packed = ops.pack_blocks(_pad_rows_to_tiles(src, tile_rows),
+                             jnp.asarray(tiles), tile_rows=tile_rows)
+    parts = [packed[a : a + c] for a, c in segs]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
+def execute_pack_jax_all(plan: CompiledPlan, src, tile_rows: int = 8):
+    """Gather EVERY dst rank's block from one (R, C) device buffer.
+
+    Pads the ragged tail once for the whole exchange instead of once per
+    ``pack_blocks`` call, then reuses the padded buffer for each rank's
+    tile gather.  Returns the per-dst-rank list of row blocks.
+    """
+    src = _pad_rows_to_tiles(src, tile_rows)
+    return [execute_pack_jax(plan, r, src, tile_rows=tile_rows)
+            for r in range(len(plan.dst))]
+
+
+class PlanCache:
+    """Thread-safe LRU of compiled plans keyed on (src, dst, shape, dtype).
+
+    Planning is O(M*N) index arithmetic per dataset; the key is pure shape
+    metadata, so a steady-state workflow hits the cache on every step after
+    the first.  ``snapshot()`` exposes hit/miss/eviction counters for the
+    redistribution benchmark.
+    """
+
+    def __init__(self, maxsize: int = 256):
+        self.maxsize = int(maxsize)
+        self._lock = threading.Lock()
+        self._plans: "OrderedDict[Tuple, CompiledPlan]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, src: Sequence[Box], dst: Sequence[Box],
+            shape: Sequence[int], dtype: Any) -> CompiledPlan:
+        key = (tuple(src), tuple(dst), tuple(int(s) for s in shape),
+               np.dtype(dtype).str)
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.hits += 1
+                self._plans.move_to_end(key)
+                return plan
+            self.misses += 1
+        # compile outside the lock -- planning may be slow for large M*N
+        plan = CompiledPlan(src, dst, shape, dtype)
+        with self._lock:
+            self._plans[key] = plan
+            self._plans.move_to_end(key)
+            while len(self._plans) > self.maxsize:
+                self._plans.popitem(last=False)
+                self.evictions += 1
+        return plan
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._plans)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "size": len(self._plans),
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0,
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self._plans.clear()
+            self.hits = self.misses = self.evictions = 0
+
+
+_PLAN_CACHE = PlanCache()
+
+
+def plan_cache() -> PlanCache:
+    return _PLAN_CACHE
+
+
+def reset_plan_cache() -> None:
+    _PLAN_CACHE.reset()
+
+
+@dataclass(frozen=True)
+class RedistSpec:
+    """A consumer port's declared ownership, carried onto the Channel.
+
+    The consumer task's ensemble instances spatially partition each matched
+    dataset along ``axis`` into ``nslots`` slabs (instance ``slot`` owns slab
+    ``slot``); within the instance, ``nranks`` logical ranks (``io_procs``
+    when subset writers are declared) subdivide the slab.  The frozen
+    dataclass doubles as the fan-out payload-cache key.
+    """
+
+    axis: int = 0
+    nslots: int = 1
+    slot: int = 0
+    nranks: int = 1
+
+    def dst_boxes(self, shape: Sequence[int]) -> Tuple[List[Box], List[Box]]:
+        """(full N-rank dst decomposition, per-instance slot boxes).
+
+        The full decomposition (all instances' ranks, slot-major) keys the
+        plan cache so sibling channels of one edge share one compiled plan.
+        """
+        slot_boxes = even_blocks(shape, self.nslots, axis=self.axis)
+        dst: List[Box] = []
+        for b_starts, b_shape in slot_boxes:
+            for starts, sh in even_blocks(b_shape, self.nranks, axis=self.axis):
+                dst.append(
+                    (tuple(s + b for s, b in zip(starts, b_starts)), sh))
+        return dst, slot_boxes
+
+    def my_ranks(self) -> range:
+        return range(self.slot * self.nranks, (self.slot + 1) * self.nranks)
+
+
 def redistribute_numpy(
     global_array: np.ndarray,
     src: Sequence[Box],
@@ -121,6 +493,20 @@ def redistribute_numpy(
         )
         outs[t.dst_rank][l] = global_array[g]
     return outs
+
+
+def redistribute_cached(
+    global_array: np.ndarray,
+    src: Sequence[Box],
+    dst: Sequence[Box],
+    cache: Optional[PlanCache] = None,
+) -> List[np.ndarray]:
+    """Drop-in for ``redistribute_numpy`` through the plan cache: the O(M*N)
+    intersection is computed once per (src, dst, shape, dtype) key and the
+    coalesced scatter executor writes straight into per-rank blocks."""
+    cache = cache or plan_cache()
+    plan = cache.get(src, dst, global_array.shape, global_array.dtype)
+    return plan.execute_global(global_array)
 
 
 def gather_to_writers(ownership: BlockOwnership, io_procs: int) -> BlockOwnership:

@@ -125,8 +125,11 @@ class VOL:
         error, it is the strategy working as intended.
 
         A per-file payload cache is shared across the fan-out: every channel
-        with the same dataset selection ships a CoW view over ONE filtered
-        payload instead of materializing its own copy (zero-copy fast path).
+        with the same dataset selection AND the same declared M->N ownership
+        (``Channel.redistribute``) ships a CoW view over ONE filtered payload
+        instead of materializing its own copy (zero-copy fast path).  Sibling
+        consumer instances of a redistributing port own different slabs, so
+        they intentionally miss each other's cache entries.
         """
         n = 0
         for f in list(self._unserved):

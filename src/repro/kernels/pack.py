@@ -35,8 +35,17 @@ def pack_blocks(
     """Gather T row-tiles of ``tile_rows`` rows each into a contiguous buffer.
 
     out[t*tile_rows:(t+1)*tile_rows] = src[tile_offsets[t]*tile_rows : ...]
+
+    A ragged source (rows not a multiple of ``tile_rows``) is zero-padded up
+    to tile granularity so the last tile's DMA stays in bounds; callers that
+    gather the tail tile (the redistribution pack executor) trim the pad rows
+    back off the packed output.
     """
     r, c = src.shape
+    pad = -r % tile_rows
+    if pad:
+        src = jnp.pad(src, ((0, pad), (0, 0)))
+        r += pad
     t = tile_offsets.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

@@ -1,12 +1,35 @@
 """M->N redistribution planner/executors: property-based to the byte."""
 
+import threading
+import time
+
 import numpy as np
 import pytest
 from hypcompat import given, settings, st
 
-from repro.core.datamodel import BlockOwnership
-from repro.core.redistribute import (even_blocks, gather_to_writers, intersect,
-                                     plan_redistribution, redistribute_numpy)
+from repro.core import Wilkins, h5
+from repro.core.channel import Channel
+from repro.core.datamodel import (BlockOwnership, File, reset_transport_stats,
+                                  transport_stats)
+from repro.core.redistribute import (CompiledPlan, PlanCache, RedistSpec,
+                                     coalesce_transfers, even_blocks,
+                                     execute_pack_jax, execute_pack_jax_all,
+                                     gather_to_writers, intersect, plan_cache,
+                                     plan_redistribution, redistribute_cached,
+                                     redistribute_numpy, reset_plan_cache)
+
+
+def ragged_blocks(n, nranks, rng, axis=0, shape=None):
+    """Random ragged 1-D decomposition along ``axis`` (uneven cut points)."""
+    shape = (n,) if shape is None else tuple(shape)
+    cuts = sorted(rng.choice(n + 1, size=nranks - 1, replace=True).tolist())
+    bounds = [0] + cuts + [n]
+    out = []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        starts = tuple(lo if a == axis else 0 for a in range(len(shape)))
+        bshape = tuple(hi - lo if a == axis else s for a, s in enumerate(shape))
+        out.append((starts, bshape))
+    return out
 
 
 def test_even_blocks_cover():
@@ -91,3 +114,421 @@ def test_reshard_jax_roundtrip():
     sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
     out = reshard_jax(arr, sh)
     np.testing.assert_array_equal(np.asarray(out), x)
+
+
+# ---------------------------------------------------------------------------
+# multi-axis / ragged planning properties
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(2, 48),
+    cols=st.integers(2, 12),
+    m_src=st.integers(1, 5),
+    m_dst=st.integers(1, 5),
+)
+def test_plan_covers_cross_axis(n, cols, m_src, m_dst):
+    """src decomposed along axis 0, dst along axis 1: still exact cover."""
+    src = even_blocks((n, cols), m_src, axis=0)
+    dst = even_blocks((n, cols), m_dst, axis=1)
+    hit = np.zeros((n, cols), dtype=int)
+    for t in plan_redistribution(src, dst):
+        slc = tuple(slice(s, s + k) for s, k in zip(t.global_starts, t.shape))
+        hit[slc] += 1
+    assert (hit == 1).all()
+
+
+def test_plan_covers_cross_axis_seeded():
+    """Deterministic cross-axis + ragged cover (runs without hypothesis)."""
+    rng = np.random.default_rng(7)
+    for n, cols, m_src, m_dst, src_axis, dst_axis in [
+        (17, 5, 3, 2, 0, 1), (32, 8, 4, 4, 1, 0), (9, 9, 2, 5, 1, 1)
+    ]:
+        src = ragged_blocks([n, cols][src_axis], m_src, rng, axis=src_axis,
+                            shape=(n, cols))
+        dst = even_blocks((n, cols), m_dst, axis=dst_axis)
+        hit = np.zeros((n, cols), dtype=int)
+        for t in plan_redistribution(src, dst):
+            slc = tuple(slice(s, s + k) for s, k in zip(t.global_starts, t.shape))
+            hit[slc] += 1
+        assert (hit == 1).all(), (n, cols, m_src, m_dst, src_axis, dst_axis)
+
+
+def test_ragged_ownership_executors_byte_exact():
+    """Ragged src x ragged dst: scatter executor == redistribute_numpy."""
+    rng = np.random.default_rng(42)
+    for trial in range(25):
+        n = int(rng.integers(1, 64))
+        cols = int(rng.integers(1, 7))
+        src = ragged_blocks(n, int(rng.integers(1, 6)), rng, shape=(n, cols))
+        dst = ragged_blocks(n, int(rng.integers(1, 6)), rng, shape=(n, cols))
+        g = rng.integers(0, 1000, size=(n, cols)).astype(np.int64)
+        want = redistribute_numpy(g, src, dst)
+        plan = CompiledPlan(src, dst, g.shape, g.dtype)
+        got_global = plan.execute_global(g)
+        src_blocks = [g[s[0]:s[0] + sh[0]] for (s, sh) in src]
+        got_scatter = plan.execute(src_blocks)
+        for w, a, b in zip(want, got_global, got_scatter):
+            np.testing.assert_array_equal(w, a)
+            np.testing.assert_array_equal(w, b)
+
+
+def test_scatter_executor_writes_into_preallocated_blocks():
+    g = np.arange(40.0).reshape(10, 4)
+    src = even_blocks(g.shape, 5)
+    dst = even_blocks(g.shape, 2)
+    plan = CompiledPlan(src, dst, g.shape, g.dtype)
+    out = [np.full(sh, -1.0) for (_, sh) in dst]
+    res = plan.execute_global(g, out=out)
+    assert res[0] is out[0] and res[1] is out[1]  # no reallocation
+    np.testing.assert_array_equal(out[0], g[:5])
+    np.testing.assert_array_equal(out[1], g[5:])
+
+
+def test_coalescing_merges_contiguous_runs():
+    from repro.core.redistribute import Transfer
+
+    # 4 src blocks feeding 2 dst blocks: per-(src,dst) descriptors stay
+    # separate (scatter reads per-source blocks) but the global-buffer runs
+    # coalesce across src ranks -- one contiguous copy per dst block.
+    src = even_blocks((8, 4), 4)
+    dst = even_blocks((8, 4), 2)
+    plan = CompiledPlan(src, dst, (8, 4), np.float32)
+    assert [len(s) for s in plan.per_dst] == [2, 2]
+    assert [len(s) for s in plan.per_dst_runs] == [1, 1]
+    assert plan.per_dst_runs[0][0] == Transfer(-1, 0, (0, 0), (4, 4))
+    assert plan.per_dst_runs[1][0] == Transfer(-1, 1, (4, 0), (4, 4))
+    # same dst fed by two adjacent pieces of one src block merges either way
+    parts = [Transfer(0, 0, (0, 0), (2, 4)), Transfer(0, 0, (2, 0), (3, 4))]
+    assert coalesce_transfers(parts) == [Transfer(0, 0, (0, 0), (5, 4))]
+    # different dst ranks never merge
+    apart = [Transfer(0, 0, (0, 0), (2, 4)), Transfer(0, 1, (2, 0), (3, 4))]
+    assert len(coalesce_transfers(apart, ignore_src=True)) == 2
+
+
+def test_aligned_detector():
+    src = even_blocks((12, 3), 3)
+    assert CompiledPlan(src, src, (12, 3), np.int32).aligned
+    assert CompiledPlan(src, src, (12, 3), np.int32).identity
+    off = even_blocks((12, 3), 4)
+    p = CompiledPlan(src, off, (12, 3), np.int32)
+    assert not p.aligned and not p.identity
+    # aligned but not identity: dst is a permutation-compatible single-block
+    assert CompiledPlan([((0, 0), (12, 3))], [((0, 0), (12, 3))],
+                        (12, 3), np.int32).aligned
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+def test_plan_cache_hit_and_invalidation():
+    c = PlanCache(maxsize=8)
+    src = even_blocks((16, 2), 4)
+    dst = even_blocks((16, 2), 2)
+    p1 = c.get(src, dst, (16, 2), np.float64)
+    p2 = c.get(src, dst, (16, 2), np.float64)
+    assert p1 is p2
+    assert c.snapshot()["hits"] == 1 and c.snapshot()["misses"] == 1
+    # different dtype / shape / blocks are different plans
+    assert c.get(src, dst, (16, 2), np.float32) is not p1
+    assert c.get(src, dst[::-1], (16, 2), np.float64) is not p1
+    assert c.snapshot()["misses"] == 3
+
+
+def test_plan_cache_lru_eviction():
+    c = PlanCache(maxsize=2)
+    shapes = [(8, 1), (9, 1), (10, 1)]
+    plans = [c.get(even_blocks(s, 2), even_blocks(s, 2), s, np.int8)
+             for s in shapes]
+    assert c.snapshot()["evictions"] == 1 and len(c) == 2
+    # (8,1) was evicted: re-getting it misses and recompiles
+    again = c.get(even_blocks((8, 1), 2), even_blocks((8, 1), 2), (8, 1), np.int8)
+    assert again is not plans[0]
+    # (10,1) is still hot
+    assert c.get(even_blocks((10, 1), 2), even_blocks((10, 1), 2),
+                 (10, 1), np.int8) is plans[2]
+
+
+def test_redistribute_cached_matches_uncached():
+    reset_plan_cache()
+    g = np.arange(60).reshape(12, 5)
+    src = even_blocks(g.shape, 3)
+    dst = even_blocks(g.shape, 4)
+    for _ in range(3):
+        outs = redistribute_cached(g, src, dst)
+        for w, a in zip(redistribute_numpy(g, src, dst), outs):
+            np.testing.assert_array_equal(w, a)
+    snap = plan_cache().snapshot()
+    assert snap["hits"] == 2 and snap["misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# JAX pack executor (kernels/pack.py lowering)
+# ---------------------------------------------------------------------------
+def test_pack_executor_matches_numpy_scatter():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(3)
+    for rows, cols, m_src, m_dst, tile_rows in [
+        (64, 8, 4, 2, 8), (40, 16, 3, 3, 8), (37, 8, 2, 5, 4)
+    ]:
+        g = rng.normal(size=(rows, cols)).astype(np.float32)
+        src = even_blocks(g.shape, m_src)
+        dst = even_blocks(g.shape, m_dst)
+        plan = CompiledPlan(src, dst, g.shape, g.dtype)
+        want = plan.execute_global(g)
+        gj = jnp.asarray(g)
+        for r in range(m_dst):
+            got = np.asarray(execute_pack_jax(plan, r, gj, tile_rows=tile_rows))
+            np.testing.assert_array_equal(got, want[r])
+
+
+def test_pack_tiles_cached_on_plan():
+    plan = CompiledPlan(even_blocks((32, 8), 2), even_blocks((32, 8), 4),
+                        (32, 8), np.float32)
+    t1, s1 = plan.pack_tiles(1, 8)
+    t2, s2 = plan.pack_tiles(1, 8)
+    assert t1 is t2 and s1 is s2  # lowered once, cached on the plan
+
+
+# ---------------------------------------------------------------------------
+# channel integration: slab shipping, aligned views, spill roundtrip
+# ---------------------------------------------------------------------------
+def _mxn_yaml(n_prod, n_cons, cons_ranks, extra=""):
+    return f"""
+tasks:
+  - func: producer
+    taskCount: {n_prod}
+    outports:
+      - filename: o.h5
+        dsets: [{{name: /g, memory: 1}}]
+  - func: consumer
+    taskCount: {n_cons}
+    nprocs: {cons_ranks}
+    inports:
+      - filename: o.h5
+        redistribute: 1
+        {extra}
+        dsets: [{{name: /g, memory: 1}}]
+"""
+
+
+def _owned(n, m):
+    own = BlockOwnership()
+    for r, (s, sh) in enumerate(even_blocks((n,), m)):
+        own.add(r, s, sh)
+    return own
+
+
+def test_mxn_channel_ships_only_owned_slabs():
+    n, steps = 512, 3
+    got = []
+    lock = threading.Lock()
+
+    def producer():
+        own = _owned(n, 4)
+        for t in range(steps):
+            with h5.File("o.h5", "w") as f:
+                f.create_dataset("/g", data=np.arange(n, dtype=np.float64) + t,
+                                 ownership=own)
+
+    def consumer():
+        while True:
+            f = h5.File("o.h5", "r")
+            if f is None:
+                break
+            d = f["/g"]
+            with lock:
+                got.append((tuple(d.attrs["redist_box_starts"]), d.shape,
+                            np.asarray(d[:])))
+
+    reset_plan_cache()
+    reset_transport_stats()
+    w = Wilkins(_mxn_yaml(4, 2, 2), {"producer": producer, "consumer": consumer})
+    rep = w.run(timeout=60)
+    # 4 channels x steps serves, each shipping HALF the dataset
+    assert rep.total_served == 4 * steps
+    assert rep.total_bytes_moved == 4 * steps * (n // 2) * 8
+    s = transport_stats().snapshot()
+    assert s["redist_baseline_bytes"] == 2 * s["redist_shipped_bytes"]
+    assert plan_cache().snapshot()["misses"] == 1  # one compile for the edge
+    for starts, shape, data in got:
+        assert shape == (n // 2,)
+        base = data[0] - starts[0]  # payload + t offset
+        np.testing.assert_array_equal(
+            data, np.arange(starts[0], starts[0] + n // 2) + base)
+
+
+def test_mxn_consumer_gets_per_rank_ownership():
+    n = 64
+    boxes = []
+
+    def producer():
+        with h5.File("o.h5", "w") as f:
+            f.create_dataset("/g", data=np.arange(n, dtype=np.float64),
+                             ownership=_owned(n, 4))
+
+    def consumer():
+        while True:
+            f = h5.File("o.h5", "r")
+            if f is None:
+                break
+            boxes.append(dict(f["/g"].ownership.blocks))
+
+    w = Wilkins(_mxn_yaml(1, 1, 2), {"producer": producer, "consumer": consumer})
+    w.run(timeout=60)
+    # nslots=1, nranks=2: the instance owns the whole extent split in two
+    assert boxes == [{0: ((0,), (32,)), 1: ((32,), (32,))}]
+
+
+def test_aligned_decomposition_ships_views_zero_copy():
+    n = 256
+
+    def producer():
+        with h5.File("o.h5", "w") as f:
+            f.create_dataset("/g", data=np.zeros(n), ownership=_owned(n, 2))
+
+    def consumer():
+        while True:
+            f = h5.File("o.h5", "r")
+            if f is None:
+                break
+            assert f["/g"].shape == (n,)  # whole extent: a view, not a slab
+
+    reset_plan_cache()
+    reset_transport_stats()
+    w = Wilkins(_mxn_yaml(1, 1, 2), {"producer": producer, "consumer": consumer})
+    w.run(timeout=60)
+    s = transport_stats().snapshot()
+    assert s["redist_aligned"] == 1 and s["redist_slabs"] == 0
+    # the view's payload bytes still count as shipped; zero bytes were COPIED
+    assert s["redist_shipped_bytes"] == s["redist_baseline_bytes"] == n * 8
+    assert s["bytes_copied"] == n * 8  # only the create_dataset snapshot
+
+
+def test_redistribute_through_file_transport(tmp_path):
+    """Slab payloads survive the spill container (ownership + attrs)."""
+    n = 128
+    got = []
+
+    yaml = f"""
+tasks:
+  - func: producer
+    taskCount: 2
+    outports:
+      - filename: o.h5
+        dsets: [{{name: /g, file: 1, memory: 0}}]
+  - func: consumer
+    taskCount: 2
+    nprocs: 1
+    inports:
+      - filename: o.h5
+        redistribute: 1
+        dsets: [{{name: /g, file: 1, memory: 0}}]
+"""
+    lock = threading.Lock()
+
+    def producer():
+        with h5.File("o.h5", "w") as f:
+            f.create_dataset("/g", data=np.arange(n, dtype=np.float64),
+                             ownership=_owned(n, 2))
+
+    def consumer():
+        while True:
+            f = h5.File("o.h5", "r")
+            if f is None:
+                break
+            d = f["/g"]
+            with lock:
+                got.append((tuple(d.attrs["redist_box_starts"]),
+                            np.asarray(d[:]), dict(d.ownership.blocks)))
+
+    w = Wilkins(yaml, {"producer": producer, "consumer": consumer},
+                spill_dir=str(tmp_path))
+    w.run(timeout=60)
+    assert sorted(s[0] for s, _, _ in got) == [0, 64]
+    for (s0,), data, blocks in got:
+        np.testing.assert_array_equal(data, np.arange(s0, s0 + 64))
+        assert blocks == {0: ((s0,), (64,))}
+
+
+def test_redist_slab_is_cow_protected():
+    """A consumer writing its slab must not corrupt the producer's buffer."""
+    f = File("o.h5")
+    src = f.create_dataset("/g", data=np.arange(16.0))
+    ch = Channel("c", ("p", 0), ("c", 0), "o.h5", ["/g"],
+                 redistribute=RedistSpec(axis=0, nslots=2, slot=1, nranks=1))
+    out = ch.filter_file(f)
+    slab = out["/g"]
+    assert slab.shape == (8,)
+    assert np.shares_memory(slab.read_direct(), src.read_direct())
+    slab[0] = -1.0  # CoW: copies the slab only
+    assert slab[0] == -1.0 and src[8] == 8.0
+    assert not np.shares_memory(slab.read_direct(), src.read_direct())
+
+
+def test_legacy_mode_honors_redistribute_contract():
+    """zero_copy=False still ships only the owned slab (eagerly copied)."""
+    f = File("o.h5")
+    src = f.create_dataset("/g", data=np.arange(16.0))
+    ch = Channel("c", ("p", 0), ("c", 0), "o.h5", ["/g"], zero_copy=False,
+                 redistribute=RedistSpec(axis=0, nslots=2, slot=1, nranks=1))
+    reset_transport_stats()
+    out = ch.filter_file(f)
+    slab = out["/g"]
+    assert slab.shape == (8,)
+    assert tuple(slab.attrs["redist_box_starts"]) == (8,)
+    assert slab.ownership.blocks == {0: ((8,), (8,))}
+    assert not np.shares_memory(slab.read_direct(), src.read_direct())
+    np.testing.assert_array_equal(slab[:], np.arange(8.0, 16.0))
+    # legacy copies eagerly -- but only the slab's bytes, not the whole file
+    assert transport_stats().snapshot()["bytes_copied"] == 8 * 8
+
+
+def test_pack_all_pads_once_and_matches_per_rank():
+    import jax.numpy as jnp
+
+    g = np.arange(37 * 8, dtype=np.float32).reshape(37, 8)  # ragged rows
+    plan = CompiledPlan(even_blocks(g.shape, 3), even_blocks(g.shape, 4),
+                        g.shape, g.dtype)
+    want = plan.execute_global(g)
+    got = execute_pack_jax_all(plan, jnp.asarray(g), tile_rows=8)
+    assert len(got) == 4
+    for w, a in zip(want, got):
+        np.testing.assert_array_equal(w, np.asarray(a))
+
+
+def test_redist_axis_and_subset_writers():
+    """redistribute: {axis: 1} decomposes columns; nwriters collapses ranks."""
+    n = 32
+    got = []
+
+    yaml = f"""
+tasks:
+  - func: producer
+    outports:
+      - filename: o.h5
+        dsets: [{{name: /g, memory: 1}}]
+  - func: consumer
+    nprocs: 4
+    nwriters: 2
+    inports:
+      - filename: o.h5
+        redistribute: {{axis: 1}}
+        dsets: [{{name: /g, memory: 1}}]
+"""
+
+    def producer():
+        with h5.File("o.h5", "w") as f:
+            f.create_dataset("/g", data=np.arange(4 * n, dtype=np.float64).reshape(4, n))
+
+    def consumer():
+        while True:
+            f = h5.File("o.h5", "r")
+            if f is None:
+                break
+            got.append(dict(f["/g"].ownership.blocks))
+
+    w = Wilkins(yaml, {"producer": producer, "consumer": consumer})
+    w.run(timeout=60)
+    # io_procs=2 subset writers along axis 1: two column blocks, not four
+    assert got == [{0: ((0, 0), (4, 16)), 1: ((0, 16), (4, 16))}]

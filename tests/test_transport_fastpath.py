@@ -398,6 +398,54 @@ def test_fanin_mux_delivers_from_any_channel():
 
 
 # ---------------------------------------------------------------------------
+# satellites: global run deadline, matches_file memo, bounded event ring
+# ---------------------------------------------------------------------------
+def test_run_timeout_is_one_global_deadline():
+    """A hung workflow with many task threads fails after ~timeout, not
+    N_threads x timeout (the old per-join bug)."""
+    yaml = """
+tasks:
+  - func: a
+    taskCount: 3
+  - func: b
+    taskCount: 3
+"""
+    release = threading.Event()
+
+    def hang():
+        release.wait(5.0)
+
+    w = Wilkins(yaml, {"a": hang, "b": hang})
+    t0 = time.monotonic()
+    with pytest.raises(TimeoutError):
+        w.run(timeout=0.3)
+    elapsed = time.monotonic() - t0
+    release.set()  # let the leaked daemon threads exit promptly
+    assert elapsed < 1.5  # 6 threads x 0.3s per-join would be >= 1.8s
+
+
+def test_matches_file_is_memoized():
+    ch = Channel("m", ("p", 0), ("c", 0), "plt*.h5", ["/g"])
+    assert ch.matches_file("plt00010.h5")
+    assert not ch.matches_file("other.h5")
+    assert ch._match_cache == {"plt00010.h5": True, "other.h5": False}
+    # memo hit returns the same answer without recompiling the reverse glob
+    assert ch.matches_file("plt00010.h5") and not ch.matches_file("other.h5")
+
+
+def test_event_ring_is_bounded_with_drop_counter():
+    ch = Channel("e", ("p", 0), ("c", 0), "o.h5", ["/g"],
+                 record_events=True, events_maxlen=8)
+    for i in range(20):
+        ch._event("producer", f"tick{i}")
+    assert len(ch.stats.events) == 8
+    assert ch.stats.events_dropped == 12
+    # the ring keeps the NEWEST events (oldest roll off)
+    assert ch.stats.events[-1][2] == "tick19"
+    assert ch.stats.events[0][2] == "tick12"
+
+
+# ---------------------------------------------------------------------------
 # glob matcher cache
 # ---------------------------------------------------------------------------
 def test_compiled_pattern_cache_hits():
