@@ -64,10 +64,16 @@ def _smoke() -> int:
     shipped = rr["mxn"]["bytes_reduction_x"]
     hit_rate = rr["mxn"]["plan_cache_hit_rate"]
     aligned_copied = rr["aligned"]["transport_bytes_copied"]
+    overlap = rr["prefetch"]["overlap_frac"]
     print(f"==== smoke: redistribute bytes_reduction={shipped:.1f}x "
           f"plan_cache_hit_rate={hit_rate:.2f} "
-          f"aligned_bytes_copied={aligned_copied} ====", flush=True)
-    ok = shipped >= 2.0 and hit_rate >= 0.9 and aligned_copied == 0
+          f"aligned_bytes_copied={aligned_copied} "
+          f"prefetch_overlap={overlap:.2f} ====", flush=True)
+    # gates: M->N shipped-bytes reduction, steady-state plan reuse, aligned
+    # zero-copy, and the reshard+prefetch pipeline hiding >= 30% of slab-serve
+    # time behind consumer compute on the 4->2 edge
+    ok = (shipped >= 2.0 and hit_rate >= 0.9 and aligned_copied == 0
+          and overlap >= 0.30)
     return 0 if ok else 1
 
 

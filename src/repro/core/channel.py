@@ -41,6 +41,7 @@ import re
 import threading
 import time
 from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -101,6 +102,23 @@ class FlowControl:
 #: default ring size for per-channel event timelines (satellite: bounded so
 #: ``record_events=True`` cannot grow memory without limit on long runs)
 EVENTS_MAXLEN = 4096
+
+# Small shared executor for asynchronous payload preparation (slab prefetch):
+# channels with a RedistSpec enqueue a *future* of the filtered payload, so
+# slab construction / eager copies / spill writes overlap with both the
+# producer's rendezvous wait and the consumer's compute on the previous step.
+_PREFETCH_POOL: Optional[ThreadPoolExecutor] = None
+_PREFETCH_POOL_LOCK = threading.Lock()
+
+
+def _prefetch_pool() -> ThreadPoolExecutor:
+    global _PREFETCH_POOL
+    if _PREFETCH_POOL is None:
+        with _PREFETCH_POOL_LOCK:
+            if _PREFETCH_POOL is None:
+                _PREFETCH_POOL = ThreadPoolExecutor(
+                    max_workers=2, thread_name_prefix="wilkins-prefetch")
+    return _PREFETCH_POOL
 
 
 @dataclass
@@ -165,6 +183,7 @@ class Channel:
         queue_depth: int = 1,
         zero_copy: bool = True,
         redistribute: Optional[RedistSpec] = None,
+        prefetch: Optional[bool] = None,
         events_maxlen: int = EVENTS_MAXLEN,
     ):
         self.name = name
@@ -182,6 +201,11 @@ class Channel:
         self.queue_depth = int(queue_depth)
         self.zero_copy = bool(zero_copy)
         self.redistribute = redistribute
+        # async payload preparation: on by default exactly when the channel
+        # carries a RedistSpec (slab construction is the serve-side work
+        # worth hiding); the YAML inport knob ``prefetch: 0/1`` overrides
+        self.prefetch = (redistribute is not None) if prefetch is None \
+            else bool(prefetch)
 
         # precompiled matchers (LRU-cached globally, pinned here for the hot path)
         self._file_matcher = compile_file_pattern(filename_pattern)
@@ -193,7 +217,12 @@ class Channel:
         self._lock = threading.Condition()
         self._queue: Deque[Tuple[str, Any]] = deque()  # bounded ring (queue_depth)
         self._done = False
-        self._consumer_waiting = 0
+        # Waiter accounting for the `latest` rendezvous decision: one entry
+        # per *distinct consumer thread* currently blocked on this channel,
+        # with a nesting depth so a thread registered by the VOL mux
+        # (``set_consumer_waiting``) that then blocks in ``get`` still counts
+        # once, not twice (double counting skewed the fan-in decision).
+        self._waiters: Dict[int, int] = {}
         self._close_count = 0
         self._spill_seq = 0
         self._listeners: List[ChannelMux] = []
@@ -341,6 +370,13 @@ class Channel:
         ``_payload_cache`` (passed by ``VOL.serve_all``) shares ONE filtered
         payload across every fan-out channel with the same dataset selection:
         each channel ships a structural ``File.view()`` over the same buffers.
+
+        Prefetching channels (``self.prefetch``, default for redistributing
+        ports) enqueue a *future* of the payload instead: ``_prepare`` runs
+        on the shared prefetch executor, overlapping slab construction with
+        this producer's rendezvous wait and with the consumer's compute on
+        the step it is still holding.  Payload bytes are then accounted at
+        delivery time (``_deliver``), when the future's size is known.
         """
         with self._lock:
             self._close_count += 1
@@ -348,14 +384,20 @@ class Channel:
                 self.stats.dropped += 1
                 self._event("producer", "skip_some")
                 return False
-            if self.strategy == FlowControl.LATEST and self._consumer_waiting == 0:
+            if self.strategy == FlowControl.LATEST and not self._waiters:
                 # No incoming request from the consumer: skip this timestep
                 # and proceed to generating the next one (paper §3.6).
                 self.stats.dropped += 1
                 self._event("producer", "skip_latest")
                 return False
 
-        payload, payload_bytes = self._prepare(f, _payload_cache)
+        if self.prefetch:
+            payload: Tuple[str, Any] = (
+                "future", _prefetch_pool().submit(self._prepare_timed, f,
+                                                  _payload_cache))
+            payload_bytes = None
+        else:
+            payload, payload_bytes = self._prepare(f, _payload_cache)
         t0 = time.monotonic()
         with self._lock:
             self._event("producer", "wait_begin")
@@ -367,11 +409,22 @@ class Channel:
                 return False
             self._queue.append(payload)
             self.stats.served += 1
-            self.stats.bytes_moved += payload_bytes
+            if payload_bytes is not None:
+                self.stats.bytes_moved += payload_bytes
             self._event("producer", "serve")
             self._lock.notify_all()
         self._notify_listeners()
         return True
+
+    def _prepare_timed(
+        self, f: File, cache: Optional[Dict[Any, File]] = None
+    ) -> Tuple[Tuple[str, Any], int]:
+        """``_prepare`` on the prefetch executor, timed for the overlap
+        accounting (prepared vs consumer-blocked seconds)."""
+        t0 = time.monotonic()
+        item, payload_bytes = self._prepare(f, cache)
+        transport_stats().record_prefetch_prepare(time.monotonic() - t0)
+        return item, payload_bytes
 
     def _prepare(
         self, f: File, cache: Optional[Dict[Any, File]] = None
@@ -382,6 +435,10 @@ class Channel:
         consumer instances of an M->N port own *different* slabs, so only
         channels with the same selection AND the same owned blocks may share
         one filtered payload.
+
+        Prefetching channels may run this concurrently on the executor; the
+        cache get/set are GIL-atomic and a lost race merely duplicates the
+        (cheap, CoW) filter work for one step, never corrupts a payload.
         """
         if self.zero_copy:
             key = (tuple(self.dset_patterns), self.redistribute)
@@ -415,6 +472,36 @@ class Channel:
         self._notify_listeners()
 
     # ------------------------------------------------------------- consumer
+    def _waiter_enter(self) -> None:
+        """Register the current thread as a blocked consumer (lock held).
+
+        Keyed by thread ident with a nesting depth: the VOL mux registering
+        via ``set_consumer_waiting`` and the same thread then blocking in
+        ``get`` collapse to ONE waiter, so the `latest` rendezvous fan-in
+        decision sees distinct blocked consumers, not registration counts.
+        """
+        me = threading.get_ident()
+        first = me not in self._waiters
+        self._waiters[me] = self._waiters.get(me, 0) + 1
+        if first:
+            self._event("consumer", "wait_begin")
+            self._lock.notify_all()  # wake a producer doing `latest` rendezvous
+
+    def _waiter_exit(self) -> None:
+        """Drop one nesting level; the thread stops counting at depth 0."""
+        me = threading.get_ident()
+        depth = self._waiters.get(me, 0) - 1
+        if depth > 0:
+            self._waiters[me] = depth
+        else:
+            self._waiters.pop(me, None)
+            self._event("consumer", "wait_end")
+
+    def waiting_consumers(self) -> int:
+        """Distinct consumer threads currently counted as blocked here."""
+        with self._lock:
+            return len(self._waiters)
+
     def _take(self) -> Tuple[str, Any]:
         """Pop under self._lock (caller holds it) and wake the producer."""
         item = self._queue.popleft()
@@ -422,8 +509,31 @@ class Channel:
         return item
 
     def _deliver(self, item: Tuple[str, Any]) -> File:
-        self._event("consumer", "recv")
         kind, payload = item
+        if kind == "future":
+            fut: "Future[Tuple[Tuple[str, Any], int]]" = payload
+            hit = fut.done()
+            t0 = time.monotonic()
+            try:
+                inner, payload_bytes = fut.result()  # re-raises prepare errors
+            except BaseException:
+                # A payload that failed to prepare must not leave the
+                # producer parked forever in the rendezvous wait (the sync
+                # path failed fast inside offer; the async path surfaces the
+                # error here, in the consumer that asked for the data, so
+                # mark the channel done to unblock and stop the producer).
+                with self._lock:
+                    self._done = True
+                    self._event("consumer", "prepare_error")
+                    self._lock.notify_all()
+                self._notify_listeners()
+                raise
+            transport_stats().record_prefetch(
+                hit, blocked_s=0.0 if hit else time.monotonic() - t0)
+            with self._lock:
+                self.stats.bytes_moved += payload_bytes
+            return self._deliver(inner)
+        self._event("consumer", "recv")
         if kind == "file":
             f = File.load(payload, mmap=True)
             try:
@@ -444,9 +554,7 @@ class Channel:
         t0 = time.monotonic()
         deadline = None if timeout is None else t0 + timeout
         with self._lock:
-            self._consumer_waiting += 1
-            self._lock.notify_all()  # wake a producer doing `latest` rendezvous
-            self._event("consumer", "wait_begin")
+            self._waiter_enter()
             try:
                 while not self._queue and not self._done:
                     remaining = None if deadline is None else deadline - time.monotonic()
@@ -457,12 +565,11 @@ class Channel:
                             f"{self.name}: no data within {timeout}s")
                     self._lock.wait(timeout=remaining)
                 self.stats.consumer_wait_s += time.monotonic() - t0
-                self._event("consumer", "wait_end")
                 if not self._queue:
                     return None  # all done
                 item = self._take()
             finally:
-                self._consumer_waiting -= 1
+                self._waiter_exit()
         return self._deliver(item)
 
     def try_get(self) -> Any:
@@ -479,15 +586,15 @@ class Channel:
 
     def set_consumer_waiting(self, waiting: bool) -> None:
         """Mark the consumer as blocked on this channel (used by the VOL
-        multiplexer so the `latest` strategy sees fan-in waiters)."""
+        multiplexer so the `latest` strategy sees fan-in waiters).
+
+        Idempotent per thread: a consumer the mux already registered that
+        then blocks in ``get`` on the same channel counts once."""
         with self._lock:
             if waiting:
-                self._consumer_waiting += 1
-                self._event("consumer", "wait_begin")
-                self._lock.notify_all()
+                self._waiter_enter()
             else:
-                self._consumer_waiting -= 1
-                self._event("consumer", "wait_end")
+                self._waiter_exit()
 
     def peek_pending(self) -> bool:
         with self._lock:

@@ -14,13 +14,21 @@ proportionally to ``nprocs`` and hands every task a ``TaskComm`` that exposes
 Task code obtains its communicator with ``comm.world()`` -- which returns the
 restricted world inside a workflow and a trivial single-rank world standalone,
 so the code is, again, identical in both settings.
+
+``TaskComm.reshard`` is the user-facing face of the M->N redistribution
+subsystem (paper §3.4): the driver wires each task's declared ``RedistSpec``s
+onto the communicator, so task code reshards a device array / numpy array /
+received Dataset into its per-rank blocks with ONE call -- no plan objects,
+no executor choice.  Device-resident 2-D arrays go through the Pallas pack
+kernels (row or column tiles); everything else takes the numpy scatter
+executors.  Plans come from the process-wide ``PlanCache``.
 """
 
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 __all__ = ["TaskComm", "world", "push_comm", "pop_comm"]
 
@@ -38,6 +46,9 @@ class TaskComm:
     devices: Optional[List[Any]] = None   # restricted JAX device group
     mesh_axes: Tuple[str, ...] = ("data",)
     extras: dict = field(default_factory=dict)
+    # filename_pattern -> RedistSpec, wired by the driver from the task's
+    # redistributing ports (consumer inports win over outports it feeds)
+    redist_specs: Dict[str, Any] = field(default_factory=dict)
 
     def is_io_proc(self, rank: Optional[int] = None) -> bool:
         r = self.rank if rank is None else rank
@@ -61,6 +72,152 @@ class TaskComm:
 
     def barrier(self) -> None:  # single-process runtime: no-op
         pass
+
+    # ------------------------------------------------------------- reshard
+    def resolve_redist_spec(self, spec: Any = None, port: Optional[str] = None):
+        """The ``RedistSpec`` governing this task's reshards.
+
+        Explicit ``spec`` wins; else ``port`` names the filename pattern of a
+        wired redistributing port; else the task must have exactly one
+        distinct spec wired by the driver."""
+        if spec is not None:
+            return spec
+        if port is not None:
+            try:
+                return self.redist_specs[port]
+            except KeyError:
+                raise ValueError(
+                    f"task {self.task!r} has no RedistSpec for port {port!r}; "
+                    f"wired ports: {sorted(self.redist_specs)}") from None
+        distinct = set(self.redist_specs.values())
+        if len(distinct) == 1:
+            return next(iter(distinct))
+        if not distinct:
+            raise ValueError(
+                f"task {self.task!r} has no RedistSpec wired; declare "
+                f"`redistribute:` on a port in the workflow YAML or pass spec=")
+        raise ValueError(
+            f"task {self.task!r} has {len(distinct)} distinct RedistSpecs "
+            f"(ports {sorted(self.redist_specs)}); pass port= or spec=")
+
+    def reshard(self, data, spec: Any = None, *, port: Optional[str] = None,
+                src: Optional[Sequence[Any]] = None, ranks: Any = "mine",
+                tile_rows: int = 8, prefer: str = "auto") -> List[Any]:
+        """Reshard an array (or received Dataset) into per-rank blocks.
+
+        The one-call face of the M->N subsystem: resolves the task's
+        ``RedistSpec`` (see ``resolve_redist_spec``), pulls the
+        ``CompiledPlan`` through the process-wide ``PlanCache``, and picks
+        the executor -- the Pallas pack kernels for device-resident 2-D
+        arrays whose plan lowers to row/column tiles, the numpy scatter
+        executors otherwise.  Task code never touches plan objects.
+
+        Parameters
+        ----------
+        data:   a ``jax.Array`` / ``np.ndarray`` holding the GLOBAL index
+                space, or a ``datamodel.Dataset`` -- either a producer-side
+                dataset (its ``ownership`` becomes the src decomposition) or
+                a consumer-side slab received over a redistributing channel
+                (recognised by its ``redist_*`` attrs; scatter reads straight
+                from the slab, no global buffer is ever stitched).
+        spec/port: see ``resolve_redist_spec``.
+        src:    explicit src decomposition (list of (starts, shape) boxes)
+                for raw arrays; default one global block.
+        ranks:  ``"mine"`` (this instance's logical ranks -- the default),
+                ``"all"`` (every dst rank of the full decomposition), or an
+                explicit iterable of dst rank ids.
+        tile_rows: pack-kernel tile extent along the decomposed axis.
+        prefer: ``"auto"`` | ``"pack"`` (raise if the kernel path cannot
+                serve) | ``"numpy"``.
+
+        Returns the per-rank block list aligned to ``ranks`` (jax arrays on
+        the pack path, numpy arrays on the scatter path).
+        """
+        import numpy as np
+
+        from .datamodel import Dataset
+        from .redistribute import execute_pack_jax, plan_cache
+
+        if prefer not in ("auto", "pack", "numpy"):
+            raise ValueError(f"prefer must be auto|pack|numpy, got {prefer!r}")
+        rspec = self.resolve_redist_spec(spec, port)
+
+        slab_box = None
+        if isinstance(data, Dataset):
+            arr = data.read_direct()
+            if "redist_box_starts" in data.attrs:
+                # a received slab: its attrs carry the global frame
+                gshape = tuple(int(s) for s in data.attrs["redist_global_shape"])
+                slab_box = (tuple(int(s) for s in data.attrs["redist_box_starts"]),
+                            tuple(arr.shape))
+                src_boxes = [slab_box]
+            elif data.ownership is not None and data.ownership.blocks:
+                gshape = tuple(arr.shape)
+                src_boxes = [data.ownership.blocks[r]
+                             for r in sorted(data.ownership.blocks)]
+            else:
+                gshape = tuple(arr.shape)
+                src_boxes = [((0,) * arr.ndim, gshape)]
+        else:
+            arr = data
+            gshape = tuple(int(s) for s in arr.shape)
+            src_boxes = ([(tuple(s), tuple(sh)) for s, sh in src]
+                         if src is not None else [((0,) * len(gshape), gshape)])
+
+        dst, _ = rspec.dst_boxes(gshape)
+        if ranks == "mine":
+            if rspec.slot < 0:
+                raise ValueError(
+                    f"task {self.task!r} is a PRODUCER for this "
+                    f"redistributing port -- it has no 'mine' in the "
+                    f"consumer decomposition; pass ranks=\"all\", explicit "
+                    f"rank ids, or an explicit spec")
+            wanted = list(rspec.my_ranks())
+        elif ranks == "all":
+            wanted = list(range(len(dst)))
+        else:
+            wanted = [int(r) for r in ranks]
+        bad = [r for r in wanted if not 0 <= r < len(dst)]
+        if bad:
+            raise ValueError(f"dst ranks {bad} out of range for the "
+                             f"{len(dst)}-block decomposition of {rspec}")
+        plan = plan_cache().get(src_boxes, dst, gshape, arr.dtype)
+
+        is_jax = False
+        if prefer != "numpy":
+            try:
+                import jax
+                is_jax = isinstance(data, jax.Array)
+            except ImportError:  # numpy-only deployment
+                pass
+        can_pack = (is_jax and slab_box is None and plan.pack_mode is not None
+                    and tuple(arr.shape) == plan.shape)
+        if prefer == "pack" and not can_pack:
+            raise ValueError(
+                "pack-kernel path unavailable: needs a jax.Array over the "
+                f"global extent and a row/col-lowerable plan (got "
+                f"type={type(data).__name__}, shape={tuple(arr.shape)}, "
+                f"pack_mode={plan.pack_mode!r}, slab={slab_box is not None})")
+        if can_pack:
+            from .redistribute import _pad_to_tiles
+            mode = plan.pack_mode
+            padded = _pad_to_tiles(arr, tile_rows, 0 if mode == "rows" else 1)
+            return [execute_pack_jax(plan, r, padded, tile_rows=tile_rows,
+                                     mode=mode) for r in wanted]
+
+        np_arr = np.asarray(arr)
+        if slab_box is not None:
+            # scatter straight out of the slab; every wanted dst box must sit
+            # inside it (an instance reshards what it was shipped)
+            from .redistribute import intersect
+            for r in wanted:
+                if intersect(dst[r], slab_box) != dst[r]:
+                    raise ValueError(
+                        f"dst rank {r} block {dst[r]} is not covered by the "
+                        f"received slab {slab_box}; reshard the slab only "
+                        f"onto ranks {list(rspec.my_ranks())}")
+            return plan.execute([np_arr], ranks=wanted)
+        return plan.execute_global(np_arr, ranks=wanted)
 
 
 def world() -> TaskComm:

@@ -98,6 +98,15 @@ class TransportStats:
         self.redist_baseline_bytes = 0
         self.redist_aligned = 0
         self.redist_slabs = 0
+        # Async slab prefetch (channels with a RedistSpec serve payload
+        # futures): a *hit* is a payload whose preparation finished before
+        # the consumer asked for it -- the slab serve was fully hidden behind
+        # consumer compute; a *miss* blocked the consumer for
+        # ``prefetch_blocked_s`` of the total ``prefetch_prepared_s``.
+        self.prefetch_hits = 0
+        self.prefetch_misses = 0
+        self.prefetch_prepared_s = 0.0
+        self.prefetch_blocked_s = 0.0
 
     def record_copy(self, nbytes: int, cow: bool = False) -> None:
         with self._lock:
@@ -109,6 +118,18 @@ class TransportStats:
     def record_view(self) -> None:
         with self._lock:
             self.views += 1
+
+    def record_prefetch_prepare(self, elapsed_s: float) -> None:
+        with self._lock:
+            self.prefetch_prepared_s += float(elapsed_s)
+
+    def record_prefetch(self, hit: bool, blocked_s: float = 0.0) -> None:
+        with self._lock:
+            if hit:
+                self.prefetch_hits += 1
+            else:
+                self.prefetch_misses += 1
+                self.prefetch_blocked_s += float(blocked_s)
 
     def record_redistribution(self, planned: int, shipped: int, baseline: int,
                               aligned: bool) -> None:
@@ -133,6 +154,10 @@ class TransportStats:
                 "redist_baseline_bytes": self.redist_baseline_bytes,
                 "redist_aligned": self.redist_aligned,
                 "redist_slabs": self.redist_slabs,
+                "prefetch_hits": self.prefetch_hits,
+                "prefetch_misses": self.prefetch_misses,
+                "prefetch_prepared_s": self.prefetch_prepared_s,
+                "prefetch_blocked_s": self.prefetch_blocked_s,
             }
 
     def reset(self) -> None:
@@ -141,6 +166,8 @@ class TransportStats:
             self.redist_planned_bytes = self.redist_shipped_bytes = 0
             self.redist_baseline_bytes = 0
             self.redist_aligned = self.redist_slabs = 0
+            self.prefetch_hits = self.prefetch_misses = 0
+            self.prefetch_prepared_s = self.prefetch_blocked_s = 0.0
 
 
 _TRANSPORT_STATS = TransportStats()
@@ -248,7 +275,14 @@ class BlockOwnership:
 
 
 class _Share:
-    """Refcount for an ndarray buffer shared across CoW dataset views."""
+    """Refcount for an ndarray buffer shared across CoW dataset views.
+
+    Every ``count`` mutation happens under ``lock``, and the (share, buffer)
+    pair on a Dataset is only ever read or swapped while holding the lock of
+    the share being replaced -- see ``Dataset._acquire_share`` /
+    ``Dataset._ensure_writable``.  Without that pairing a ``view()`` racing a
+    CoW materialization can increment a share the writer is detaching and
+    then alias the writer's fresh private buffer (torn capture)."""
 
     __slots__ = ("count", "lock")
 
@@ -306,6 +340,20 @@ class Dataset:
             self._data = np.zeros(self.shape, dtype=self.dtype)
 
     # -- copy-on-write ------------------------------------------------------
+    def _acquire_share(self) -> Tuple[_Share, np.ndarray]:
+        """Atomically (share.count += 1, snapshot (share, data)).
+
+        A concurrent ``_ensure_writable`` may swap ``self._share`` /
+        ``self._data`` between our read of the share and taking its lock; the
+        identity re-check restarts so the increment always lands on the share
+        that actually guards the buffer we alias."""
+        while True:
+            share = self._share
+            with share.lock:
+                if share is self._share:
+                    share.count += 1
+                    return share, self._data
+
     def view(self, parent: Optional["Group"] = None) -> "Dataset":
         """Zero-copy view sharing this dataset's buffer (copy deferred to
         first write, on either side).  Attributes are shallow-copied so a
@@ -317,10 +365,7 @@ class Dataset:
         ds.attrs = dict(self.attrs)
         ds.parent = parent
         ds.ownership = self.ownership
-        with self._share.lock:
-            self._share.count += 1
-        ds._share = self._share
-        ds._data = self._data
+        ds._share, ds._data = self._acquire_share()
         _TRANSPORT_STATS.record_view()
         return ds
 
@@ -342,34 +387,44 @@ class Dataset:
         ds.attrs = dict(self.attrs)
         ds.parent = parent
         ds.ownership = None
-        with self._share.lock:
-            self._share.count += 1
-        ds._share = self._share
-        ds._data = self._data[slc]
+        ds._share, base = self._acquire_share()
+        ds._data = base[slc]
         _TRANSPORT_STATS.record_view()
         return ds
 
     @property
     def share_count(self) -> int:
-        return self._share.count
+        share = self._share
+        with share.lock:
+            return share.count
 
     def _is_exclusive(self) -> bool:
-        return self._share.count == 1 and self._data.flags.writeable
+        share = self._share
+        with share.lock:
+            return share is self._share and share.count == 1 \
+                and self._data.flags.writeable
 
     def _ensure_writable(self) -> None:
         """Materialize a private copy if the buffer is shared or read-only."""
-        share = self._share
-        with share.lock:
-            if share.count == 1 and self._data.flags.writeable:
-                return
-            # Copy while holding the share lock: a sibling sharer must not
-            # pass its own count==1 fast path and write the buffer in place
-            # before this snapshot is complete (torn-copy race).
-            new = np.array(self._data)
-            share.count -= 1
+        while True:
+            share = self._share
+            with share.lock:
+                if share is not self._share:
+                    continue  # a concurrent writer swapped us; re-read
+                if share.count == 1 and self._data.flags.writeable:
+                    return
+                # Copy AND swap while holding the share lock: a sibling
+                # sharer must not pass its own count==1 fast path and write
+                # the buffer in place before this snapshot is complete
+                # (torn-copy race), and a concurrent ``view()`` must never
+                # observe the new private buffer paired with the old share
+                # (torn-capture race -- see _acquire_share).
+                new = np.array(self._data)
+                share.count -= 1
+                self._data = new
+                self._share = _Share(1)
+                break
         _TRANSPORT_STATS.record_copy(new.nbytes, cow=True)
-        self._data = new
-        self._share = _Share(1)
 
     # -- HDF5-ish surface ---------------------------------------------------
     @property

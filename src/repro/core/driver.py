@@ -26,7 +26,7 @@ import os
 import threading
 import time
 import traceback
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from . import actions as actions_mod
@@ -197,6 +197,7 @@ class Wilkins:
                     queue_depth=edge.queue_depth,
                     zero_copy=self.zero_copy,
                     redistribute=redist,
+                    prefetch=edge.prefetch,
                 )
                 self.channels.append(ch)
 
@@ -216,12 +217,34 @@ class Wilkins:
                         vol.set_memory(ch.filename_pattern)
                     else:
                         vol.set_file(ch.filename_pattern)
+                # declared producer ownership (YAML `outports: {ownership:}`):
+                # datasets written through this VOL get per-rank blocks
+                # stamped at close, so M->N planning sees the real source
+                # decomposition without task-code changes
+                for port in t.outports:
+                    if port.ownership:
+                        vol.set_ownership(port.filename, port.own_axis,
+                                          port.own_nranks or t.io_procs)
                 self.vols[(name, i)] = vol
                 rank_offset += t.nprocs
 
     # ------------------------------------------------------------ execution
     def _make_comm(self, name: str, inst: int) -> TaskComm:
         t = self.graph.tasks[name]
+        # Wire the task's RedistSpecs so task code can `comm.reshard(...)`
+        # without touching plans: consumer inport specs are exact (their slot
+        # IS this instance); a producer feeding a redistributing port gets
+        # the consumer's decomposition with ``slot=-1`` -- the producer has
+        # no "mine", so reshard demands ranks="all" (or explicit ids)
+        # instead of silently returning one consumer instance's blocks.
+        specs: Dict[str, RedistSpec] = {}
+        for ch in self.channels:
+            if ch.redistribute is not None and ch.producer == (name, inst):
+                specs.setdefault(ch.filename_pattern,
+                                 replace(ch.redistribute, slot=-1))
+        for ch in self.channels:
+            if ch.redistribute is not None and ch.consumer == (name, inst):
+                specs[ch.filename_pattern] = ch.redistribute
         return TaskComm(
             task=name,
             instance=inst,
@@ -229,6 +252,7 @@ class Wilkins:
             size=t.nprocs,
             io_procs=t.io_procs,
             devices=self.device_groups.get((name, inst)),
+            redist_specs=specs,
         )
 
     def _run_instance(self, name: str, inst: int, report: WorkflowReport) -> None:
@@ -305,17 +329,57 @@ class Wilkins:
         # One global deadline across ALL joins: a per-thread timeout would let
         # a hung workflow take N_threads x timeout to fail.
         deadline = None if timeout is None else time.monotonic() + timeout
+        hung: List[str] = []
         for th in threads:
             remaining = None
             if deadline is not None:
                 remaining = max(0.0, deadline - time.monotonic())
             th.join(timeout=remaining)
             if th.is_alive():
-                raise TimeoutError(f"task thread {th.name} did not finish")
+                hung.append(th.name)
         report.wall_time_s = time.monotonic() - t0
+        # Both failure paths carry the partial WorkflowReport (channel stats,
+        # gantt events, per-task failures) as ``err.report``, and every
+        # secondary task error stays reachable via the __context__ chain --
+        # raising only errors[0] used to silently discard the rest.
+        if hung:
+            err: BaseException = TimeoutError(
+                f"task threads did not finish before the deadline: {hung}")
+            err = _chain_errors(err, errors)
+            err.report = report  # type: ignore[attr-defined]
+            raise err
         if errors:
-            raise errors[0]
+            primary = _chain_errors(errors[0], errors[1:])
+            primary.report = report  # type: ignore[attr-defined]
+            raise primary
         return report
+
+
+def _chain_errors(
+    primary: BaseException, rest: Sequence[BaseException]
+) -> BaseException:
+    """Attach ``rest`` to ``primary``'s ``__context__`` chain (exception-group
+    semantics on the implicit-chaining mechanism: ``raise primary`` shows
+    every secondary as 'During handling of ... another exception occurred').
+
+    Cycle-safe: an error already reachable from the chain is not re-linked.
+    """
+    seen: set = set()
+
+    def _tail(e: BaseException) -> BaseException:
+        seen.add(id(e))
+        while e.__context__ is not None and id(e.__context__) not in seen:
+            e = e.__context__
+            seen.add(id(e))
+        return e
+
+    tail = _tail(primary)
+    for e in rest:
+        if id(e) in seen:
+            continue
+        tail.__context__ = e
+        tail = _tail(e)
+    return primary
 
 
 def _takes_arg(fn: Callable) -> bool:

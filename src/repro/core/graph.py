@@ -61,6 +61,17 @@ class Port:
                                 # matched dataset and the channel ships only
                                 # the owned blocks (paper §3.2.2 / LowFive)
     redist_axis: int = 0        # decomposition axis of the owned blocks
+    prefetch: Optional[bool] = None  # inport knob: overlap slab serving with
+                                     # consumer compute (None = on whenever
+                                     # the port redistributes)
+    ownership: bool = False     # outports only: the producer's logical ranks
+                                # own an even decomposition of every written
+                                # dataset; the VOL stamps BlockOwnership at
+                                # file close (replaces create_dataset(
+                                # ownership=...) in task code)
+    own_axis: int = 0           # decomposition axis of the producer blocks
+    own_nranks: Optional[int] = None  # block count; None = the task's
+                                      # io_procs (nwriters | nprocs)
 
 
 @dataclass
@@ -92,6 +103,7 @@ class Edge:
     queue_depth: int = 1
     redistribute: bool = False  # consumer inport declared M->N ownership
     redist_axis: int = 0
+    prefetch: Optional[bool] = None  # consumer inport's async-serve knob
 
     def instance_links(self, np_: int, nc: int) -> List[Tuple[int, int]]:
         """Round-robin instance pairing over the longer list (paper Fig. 3)."""
@@ -123,9 +135,34 @@ def _parse_port(p: Dict[str, Any]) -> Port:
         redist = bool(int(redist or 0))
     if axis < 0:
         raise ValueError(f"redistribute axis must be >= 0, got {axis}")
+    prefetch = p.get("prefetch")
+    if prefetch is not None:
+        prefetch = bool(int(prefetch))
+    # ``ownership: 1`` or ``ownership: {axis: A, nranks: K}`` on an outport
+    own = p.get("ownership", 0)
+    own_axis, own_nranks = 0, None
+    if isinstance(own, dict):
+        unknown = set(own) - {"axis", "nranks"}
+        if unknown:
+            raise ValueError(
+                f"port {p['filename']!r}: unknown ownership keys {sorted(unknown)} "
+                f"(expected axis, nranks)")
+        own_axis = int(own.get("axis", 0))
+        if "nranks" in own:
+            own_nranks = int(own["nranks"])
+        own = True
+    else:
+        own = bool(int(own or 0))
+    if own_axis < 0:
+        raise ValueError(
+            f"port {p['filename']!r}: ownership axis must be >= 0, got {own_axis}")
+    if own_nranks is not None and own_nranks < 1:
+        raise ValueError(
+            f"port {p['filename']!r}: ownership nranks must be >= 1, got {own_nranks}")
     return Port(filename=p["filename"], dsets=dsets,
                 io_freq=int(p.get("io_freq", 1)), queue_depth=qd,
-                redistribute=redist, redist_axis=axis)
+                redistribute=redist, redist_axis=axis, prefetch=prefetch,
+                ownership=own, own_axis=own_axis, own_nranks=own_nranks)
 
 
 def _parse_task(t: Dict[str, Any]) -> TaskSpec:
@@ -134,7 +171,7 @@ def _parse_task(t: Dict[str, Any]) -> TaskSpec:
         if not (isinstance(actions, (list, tuple)) and len(actions) == 2):
             raise ValueError(f"actions must be [script, function], got {actions!r}")
         actions = (str(actions[0]), str(actions[1]))
-    return TaskSpec(
+    spec = TaskSpec(
         func=t["func"],
         nprocs=int(t.get("nprocs", 1)),
         task_count=int(t.get("taskCount", 1)),
@@ -145,6 +182,25 @@ def _parse_task(t: Dict[str, Any]) -> TaskSpec:
         outports=[_parse_port(p) for p in t.get("outports", [])],
         raw=dict(t),
     )
+    for p in spec.inports:
+        if p.ownership:
+            raise ValueError(
+                f"task {spec.func!r}: ownership is an outport declaration "
+                f"(inport {p.filename!r} declared it); use redistribute: on "
+                f"inports")
+    for p in spec.outports:
+        if p.prefetch is not None:
+            raise ValueError(
+                f"task {spec.func!r}: prefetch is an inport declaration "
+                f"(outport {p.filename!r} declared it); it rides the "
+                f"consumer's redistribute port")
+        if p.own_nranks is not None and p.own_nranks not in (
+                spec.nprocs, spec.io_procs):
+            raise ValueError(
+                f"task {spec.func!r} outport {p.filename!r}: ownership nranks "
+                f"{p.own_nranks} matches neither nprocs={spec.nprocs} nor "
+                f"nwriters={spec.io_procs}")
+    return spec
 
 
 class WorkflowGraph:
@@ -206,6 +262,7 @@ class WorkflowGraph:
                                     queue_depth=inp.queue_depth,
                                     redistribute=inp.redistribute,
                                     redist_axis=inp.redist_axis,
+                                    prefetch=inp.prefetch,
                                 )
                             )
         return edges

@@ -177,7 +177,7 @@ class CompiledPlan:
 
     __slots__ = ("src", "dst", "shape", "dtype", "per_dst", "per_dst_runs",
                  "transfers", "identity", "aligned", "nbytes_planned",
-                 "_pack_cache", "_pack_lock")
+                 "_pack_cache", "_pack_lock", "_pack_mode")
 
     def __init__(self, src: Sequence[Box], dst: Sequence[Box],
                  shape: Sequence[int], dtype: Any = np.float64):
@@ -209,8 +209,9 @@ class CompiledPlan:
         self.nbytes_planned = (
             sum(t.nbytes_factor for t in self.transfers) * self.dtype.itemsize
         )
-        self._pack_cache: Dict[Tuple[int, int], Tuple[np.ndarray, Tuple[Tuple[int, int], ...]]] = {}
+        self._pack_cache: Dict[Tuple[int, int, str], Tuple[np.ndarray, Tuple[Tuple[int, int], ...]]] = {}
         self._pack_lock = threading.Lock()
+        self._pack_mode = self._compute_pack_mode()
 
     # ------------------------------------------------------------- executors
     def dst_bytes(self, ranks: Sequence[int]) -> int:
@@ -223,6 +224,7 @@ class CompiledPlan:
         self,
         src_blocks: Sequence[np.ndarray],
         out: Optional[Sequence[np.ndarray]] = None,
+        ranks: Optional[Sequence[int]] = None,
     ) -> List[np.ndarray]:
         """Scatter per-src-rank blocks into per-dst-rank blocks.
 
@@ -230,12 +232,15 @@ class CompiledPlan:
         Writes go straight into ``out`` (preallocated per-rank destination
         blocks; allocated here if not given) -- the global array is never
         materialized, and each coalesced run is one numpy slice copy.
+        ``ranks`` restricts the scatter to those dst ranks (the returned list
+        is aligned to it) -- a consumer instance computes only its own blocks.
         """
+        wanted = list(range(len(self.dst))) if ranks is None else list(ranks)
         if out is None:
-            out = [np.empty(sh, dtype=self.dtype) for (_, sh) in self.dst]
-        for dr, slabs in enumerate(self.per_dst):
+            out = [np.empty(self.dst[r][1], dtype=self.dtype) for r in wanted]
+        for i, dr in enumerate(wanted):
             dstarts = self.dst[dr][0]
-            for t in slabs:
+            for t in self.per_dst[dr]:
                 sstarts = self.src[t.src_rank][0]
                 s_sl = tuple(
                     slice(g - s, g - s + n)
@@ -245,24 +250,28 @@ class CompiledPlan:
                     slice(g - s, g - s + n)
                     for g, s, n in zip(t.global_starts, dstarts, t.shape)
                 )
-                out[dr][d_sl] = src_blocks[t.src_rank][s_sl]
+                out[i][d_sl] = src_blocks[t.src_rank][s_sl]
         return list(out)
 
     def execute_global(
         self,
         global_array: np.ndarray,
         out: Optional[Sequence[np.ndarray]] = None,
+        ranks: Optional[Sequence[int]] = None,
     ) -> List[np.ndarray]:
         """Scatter from the stitched global array (the in-process transport
         holds one buffer for all producer ranks) into per-dst-rank blocks.
 
         Walks ``per_dst_runs``: transfers coalesced across source ranks, so a
-        dst block fed by k adjacent producer blocks is one slice copy."""
+        dst block fed by k adjacent producer blocks is one slice copy.
+        ``ranks`` restricts to those dst ranks, as in ``execute``."""
+        wanted = list(range(len(self.dst))) if ranks is None else list(ranks)
         if out is None:
-            out = [np.empty(sh, dtype=global_array.dtype) for (_, sh) in self.dst]
-        for dr, slabs in enumerate(self.per_dst_runs):
+            out = [np.empty(self.dst[r][1], dtype=global_array.dtype)
+                   for r in wanted]
+        for i, dr in enumerate(wanted):
             dstarts = self.dst[dr][0]
-            for t in slabs:
+            for t in self.per_dst_runs[dr]:
                 g_sl = tuple(
                     slice(s, s + n) for s, n in zip(t.global_starts, t.shape)
                 )
@@ -270,15 +279,37 @@ class CompiledPlan:
                     slice(g - s, g - s + n)
                     for g, s, n in zip(t.global_starts, dstarts, t.shape)
                 )
-                out[dr][d_sl] = global_array[g_sl]
+                out[i][d_sl] = global_array[g_sl]
         return list(out)
 
     # ----------------------------------------------------- pack-kernel lowering
+    def _compute_pack_mode(self) -> Optional[str]:
+        """Which pack-kernel layout covers this plan, if any.
+
+        ``"rows"`` when every coalesced run is a full-width row slab (axis-0
+        decompositions), ``"cols"`` when every run is a full-height column
+        slab (axis-1), ``None`` for plans the kernel cannot DMA (non-2-D or
+        mixed-axis tilings -- those take the numpy scatter executors).
+        """
+        if len(self.shape) != 2:
+            return None
+        rows, cols = self.shape
+        runs = [t for slabs in self.per_dst_runs for t in slabs]
+        if all(t.global_starts[1] == 0 and t.shape[1] == cols for t in runs):
+            return "rows"
+        if all(t.global_starts[0] == 0 and t.shape[0] == rows for t in runs):
+            return "cols"
+        return None
+
+    @property
+    def pack_mode(self) -> Optional[str]:
+        return self._pack_mode
+
     def row_runs(self, dst_rank: int) -> List[Tuple[int, int]]:
         """dst_rank's needed global rows as coalesced (start, count) runs.
 
         Only valid for full-width row decompositions (2-D, every transfer
-        spanning all columns) -- the layout ``kernels.pack`` DMAs.
+        spanning all columns) -- the layout ``kernels.pack.pack_blocks`` DMAs.
         """
         if len(self.shape) != 2:
             raise ValueError(f"row_runs needs a 2-D plan, got shape {self.shape}")
@@ -291,24 +322,43 @@ class CompiledPlan:
             runs.append((t.global_starts[0], t.shape[0]))
         return runs
 
-    def pack_tiles(
-        self, dst_rank: int, tile_rows: int = 8
-    ) -> Tuple[np.ndarray, Tuple[Tuple[int, int], ...]]:
-        """Lower dst_rank's row runs to pack-kernel tile offsets (cached).
+    def col_runs(self, dst_rank: int) -> List[Tuple[int, int]]:
+        """dst_rank's needed global columns as coalesced (start, count) runs.
 
-        Returns ``(tile_offsets, segments)``: the int32 source row-tile index
-        per output tile (the kernel's scalar-prefetch operand) and, per run,
-        ``(row_in_packed_output, row_count)`` to trim the tile padding back to
-        the exact rows.
+        The column twin of ``row_runs``: only valid for full-height column
+        decompositions (2-D, every transfer spanning all rows) -- the layout
+        ``kernels.pack.pack_cols`` DMAs for axis-1 reshards.
         """
-        key = (dst_rank, tile_rows)
+        if len(self.shape) != 2:
+            raise ValueError(f"col_runs needs a 2-D plan, got shape {self.shape}")
+        rows = self.shape[0]
+        runs: List[Tuple[int, int]] = []
+        for t in self.per_dst_runs[dst_rank]:
+            if t.global_starts[0] != 0 or t.shape[0] != rows:
+                raise ValueError(
+                    f"pack col lowering needs full-height column slabs, got {t}")
+            runs.append((t.global_starts[1], t.shape[1]))
+        return runs
+
+    def pack_tiles(
+        self, dst_rank: int, tile_rows: int = 8, mode: str = "rows"
+    ) -> Tuple[np.ndarray, Tuple[Tuple[int, int], ...]]:
+        """Lower dst_rank's runs to pack-kernel tile offsets (cached).
+
+        Returns ``(tile_offsets, segments)``: the int32 source tile index per
+        output tile (the kernel's scalar-prefetch operand) and, per run,
+        ``(offset_in_packed_output, count)`` to trim the tile padding back to
+        the exact rows (``mode="rows"``) or columns (``mode="cols"``).
+        """
+        key = (dst_rank, tile_rows, mode)
         with self._pack_lock:
             hit = self._pack_cache.get(key)
         if hit is not None:
             return hit
+        runs = self.row_runs(dst_rank) if mode == "rows" else self.col_runs(dst_rank)
         tiles: List[int] = []
         segs: List[Tuple[int, int]] = []
-        for start, cnt in self.row_runs(dst_rank):
+        for start, cnt in runs:
             t0 = start // tile_rows
             t1 = -(-(start + cnt) // tile_rows)
             segs.append((len(tiles) * tile_rows + (start - t0 * tile_rows), cnt))
@@ -319,49 +369,75 @@ class CompiledPlan:
         return result
 
 
-def _pad_rows_to_tiles(src, tile_rows: int):
-    """Pad the (R, C) buffer so R is a tile_rows multiple (one copy, reused
-    across every dst rank's gather -- the kernel then never re-pads)."""
+def _pad_to_tiles(src, tile: int, axis: int):
+    """Pad the (R, C) buffer so ``shape[axis]`` is a tile multiple (one copy,
+    reused across every dst rank's gather -- the kernel then never re-pads)."""
     import jax.numpy as jnp
 
-    pad = -src.shape[0] % tile_rows
-    return jnp.pad(src, ((0, pad), (0, 0))) if pad else src
+    pad = -src.shape[axis] % tile
+    if not pad:
+        return src
+    widths = [(0, 0), (0, 0)]
+    widths[axis] = (0, pad)
+    return jnp.pad(src, widths)
+
+
+def _resolve_pack_mode(plan: CompiledPlan, mode: Optional[str]) -> str:
+    if mode is None:
+        mode = plan.pack_mode
+    if mode not in ("rows", "cols"):
+        raise ValueError(
+            f"plan is not pack-kernel lowerable (shape {plan.shape}, "
+            f"pack_mode={plan.pack_mode!r}); use the numpy scatter executors")
+    return mode
 
 
 def execute_pack_jax(plan: CompiledPlan, dst_rank: int, src,
-                     tile_rows: int = 8):
-    """Device-resident reshard: gather dst_rank's rows with the Pallas pack
-    kernel (``kernels.pack.pack_blocks`` scalar-prefetch DMA tiles).
+                     tile_rows: int = 8, mode: Optional[str] = None):
+    """Device-resident reshard: gather dst_rank's slab with the Pallas pack
+    kernel (``kernels.pack`` scalar-prefetch DMA tiles).
 
-    ``src`` is the (R, C) device buffer holding the global row space.  The
-    tile offsets come from the cached plan lowering (``plan.pack_tiles``);
-    ragged run boundaries are padded to tile granularity and trimmed back
-    here.  Gathering several dst ranks from one ragged buffer?  Use
-    ``execute_pack_jax_all`` so the pad copy happens once, not per rank.
-    Runs in interpret mode on CPU, Mosaic on TPU.
+    ``src`` is the (R, C) device buffer holding the global index space.
+    ``mode`` picks the tile layout -- ``"rows"`` (``pack_blocks``, axis-0
+    decompositions) or ``"cols"`` (``pack_cols``, axis-1); ``None`` takes the
+    plan's detected ``pack_mode``.  ``tile_rows`` is the tile extent along
+    the decomposed axis.  The tile offsets come from the cached plan lowering
+    (``plan.pack_tiles``); ragged run boundaries are padded to tile
+    granularity and trimmed back here.  Gathering several dst ranks from one
+    ragged buffer?  Use ``execute_pack_jax_all`` so the pad copy happens
+    once, not per rank.  Runs in interpret mode on CPU, Mosaic on TPU.
     """
     import jax.numpy as jnp
 
     from repro.kernels import ops
 
-    tiles, segs = plan.pack_tiles(dst_rank, tile_rows)
+    mode = _resolve_pack_mode(plan, mode)
+    axis = 0 if mode == "rows" else 1
+    tiles, segs = plan.pack_tiles(dst_rank, tile_rows, mode=mode)
     if tiles.size == 0:
-        return jnp.zeros((0, plan.shape[1]), dtype=src.dtype)
-    packed = ops.pack_blocks(_pad_rows_to_tiles(src, tile_rows),
-                             jnp.asarray(tiles), tile_rows=tile_rows)
-    parts = [packed[a : a + c] for a, c in segs]
-    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+        empty = (0, plan.shape[1]) if axis == 0 else (plan.shape[0], 0)
+        return jnp.zeros(empty, dtype=src.dtype)
+    padded = _pad_to_tiles(src, tile_rows, axis)
+    if mode == "rows":
+        packed = ops.pack_blocks(padded, jnp.asarray(tiles), tile_rows=tile_rows)
+        parts = [packed[a : a + c] for a, c in segs]
+    else:
+        packed = ops.pack_cols(padded, jnp.asarray(tiles), tile_cols=tile_rows)
+        parts = [packed[:, a : a + c] for a, c in segs]
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=axis)
 
 
-def execute_pack_jax_all(plan: CompiledPlan, src, tile_rows: int = 8):
+def execute_pack_jax_all(plan: CompiledPlan, src, tile_rows: int = 8,
+                         mode: Optional[str] = None):
     """Gather EVERY dst rank's block from one (R, C) device buffer.
 
     Pads the ragged tail once for the whole exchange instead of once per
-    ``pack_blocks`` call, then reuses the padded buffer for each rank's
-    tile gather.  Returns the per-dst-rank list of row blocks.
+    kernel call, then reuses the padded buffer for each rank's tile gather.
+    Returns the per-dst-rank list of slab blocks.
     """
-    src = _pad_rows_to_tiles(src, tile_rows)
-    return [execute_pack_jax(plan, r, src, tile_rows=tile_rows)
+    mode = _resolve_pack_mode(plan, mode)
+    src = _pad_to_tiles(src, tile_rows, 0 if mode == "rows" else 1)
+    return [execute_pack_jax(plan, r, src, tile_rows=tile_rows, mode=mode)
             for r in range(len(plan.dst))]
 
 

@@ -28,7 +28,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .channel import NO_DATA, Channel, ChannelMux
-from .datamodel import File
+from .datamodel import BlockOwnership, File, compile_file_pattern
 
 __all__ = ["VOL", "current_vol", "push_vol", "pop_vol"]
 
@@ -66,6 +66,12 @@ class VOL:
         # (filename_pattern -> mode) properties; "memory" wins by default
         self._props: Dict[str, str] = {}
 
+        # declared producer ownership per outport pattern (driver sets these
+        # from YAML ``outports: [{ownership: {axis: A}}]``): every dataset
+        # written to a matching file gets an even per-rank BlockOwnership
+        # stamped at close, replacing create_dataset(ownership=...) calls
+        self._ownership: List[Tuple[Any, int, int]] = []  # (matcher, axis, nranks)
+
         # callback registry (LowFive execution points)
         self._cb: Dict[str, Optional[Callable[[Any], None]]] = {
             "before_file_open": None,
@@ -89,6 +95,41 @@ class VOL:
 
     def set_file(self, filename_pattern: str, dset_pattern: str = "*") -> None:
         self._props[filename_pattern] = "file"
+
+    def set_ownership(self, filename_pattern: str, axis: int, nranks: int) -> None:
+        """Declare that this task's ``nranks`` logical ranks own an even
+        ``axis`` decomposition of every dataset written to matching files."""
+        self._ownership.append((compile_file_pattern(filename_pattern),
+                                int(axis), int(nranks)))
+
+    def _stamp_ownership(self, f: File) -> None:
+        """Apply declared producer ownership to a file at close time.
+
+        Datasets that already carry an ownership map (task code called
+        ``create_dataset(ownership=...)``) are left alone; scalars have no
+        decomposition axis and are skipped; an axis beyond a dataset's rank
+        is a workflow-description error and raises clearly."""
+        from .redistribute import even_blocks
+
+        for matcher, axis, nranks in self._ownership:
+            if not (matcher.matches(f.filename)
+                    or compile_file_pattern(f.filename).matches(matcher.pattern)):
+                continue
+            for ds in f.visit_datasets():
+                if ds.ownership is not None and ds.ownership.blocks:
+                    continue
+                if not ds.shape:
+                    continue  # scalar: nothing to decompose
+                if axis >= len(ds.shape):
+                    raise ValueError(
+                        f"task {self.task!r}: declared ownership axis {axis} "
+                        f"out of range for dataset {ds.path} with shape "
+                        f"{ds.shape} in {f.filename!r}")
+                own = BlockOwnership()
+                for r, (s, sh) in enumerate(
+                        even_blocks(ds.shape, nranks, axis=axis)):
+                    own.add(r, s, sh)
+                ds.ownership = own
 
     # ------------------------------------------------------------- callbacks
     def set_before_file_open(self, cb: Callable[[Any], None]) -> None:
@@ -162,6 +203,7 @@ class VOL:
         self._open_files[f.filename] = f
 
     def on_file_close(self, f: File) -> None:
+        self._stamp_ownership(f)
         self._fire("before_file_close", f)
         self.file_close_counter += 1
         self._unserved.append(f)

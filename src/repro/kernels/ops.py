@@ -17,7 +17,7 @@ from . import flash_attention as _fa
 from . import pack as _pack
 from . import ssd_scan as _ssd
 
-__all__ = ["flash_attention", "ssd_chunked_pallas", "pack_blocks"]
+__all__ = ["flash_attention", "ssd_chunked_pallas", "pack_blocks", "pack_cols"]
 
 
 def _interpret() -> bool:
@@ -153,3 +153,9 @@ def _ssd_impl(x, dA, Bm, Cm, chunk: int = 256, initial_state=None):
 def pack_blocks(src, tile_offsets, tile_rows: int = 8):
     return _pack.pack_blocks(src, tile_offsets, tile_rows=tile_rows,
                              interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("tile_cols",))
+def pack_cols(src, tile_offsets, tile_cols: int = 8):
+    return _pack.pack_cols(src, tile_offsets, tile_cols=tile_cols,
+                           interpret=_interpret())

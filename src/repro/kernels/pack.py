@@ -8,8 +8,16 @@ index-map-driven DMA: the block offsets arrive as a *scalar-prefetch* operand
 ``index_map`` points the DMA engine at the right source row -- no gather
 scatter ops, just strided HBM->VMEM->HBM copies.
 
-Tiles are (tile_rows, cols); the planner pads ragged blocks up to tile
-granularity (LowFive ships whole hyperslabs, same idea).
+Two tile layouts cover the planner's 1-D decompositions of a 2-D buffer:
+
+* ``pack_blocks`` -- row-slab gathers (axis-0 decompositions): tiles are
+  (tile_rows, cols) and the scalar operand indexes source row-tiles.
+* ``pack_cols``   -- column-slab gathers (axis-1 decompositions): tiles are
+  (rows, tile_cols) and the scalar operand indexes source column-tiles, so
+  axis!=0 reshards stay on the kernel path instead of falling back to numpy.
+
+The planner pads ragged blocks up to tile granularity (LowFive ships whole
+hyperslabs, same idea).
 """
 
 from __future__ import annotations
@@ -59,5 +67,44 @@ def pack_blocks(
         _pack_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t * tile_rows, c), src.dtype),
+        interpret=interpret,
+    )(tile_offsets, src)
+
+
+def pack_cols(
+    src: jnp.ndarray,           # (R, C) source buffer
+    tile_offsets: jnp.ndarray,  # (T,) int32: source col-tile index per out tile
+    tile_cols: int = 8,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Gather T column-tiles of ``tile_cols`` columns each, contiguously.
+
+    out[:, t*tile_cols:(t+1)*tile_cols] = src[:, tile_offsets[t]*tile_cols : ...]
+
+    The column twin of ``pack_blocks``: the grid walks output column tiles
+    and the scalar-prefetch operand points each tile's DMA at the right
+    source column band (full-height (R, tile_cols) blocks).  A ragged source
+    (columns not a multiple of ``tile_cols``) is zero-padded up to tile
+    granularity; callers trim the pad columns back off the packed output.
+    On real TPU prefer ``tile_cols`` multiples of the 128-lane width.
+    """
+    r, c = src.shape
+    pad = -c % tile_cols
+    if pad:
+        src = jnp.pad(src, ((0, 0), (0, pad)))
+        c += pad
+    t = tile_offsets.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((r, tile_cols), lambda i, offs: (0, offs[i])),
+        ],
+        out_specs=pl.BlockSpec((r, tile_cols), lambda i, offs: (0, i)),
+    )
+    return pl.pallas_call(
+        _pack_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((r, t * tile_cols), src.dtype),
         interpret=interpret,
     )(tile_offsets, src)

@@ -54,3 +54,11 @@ def pack_blocks_ref(src, tile_offsets, tile_rows=8):
     src = np.asarray(src)
     out = [src[o * tile_rows:(o + 1) * tile_rows] for o in np.asarray(tile_offsets)]
     return np.concatenate(out, axis=0)
+
+
+def pack_cols_ref(src, tile_offsets, tile_cols=8):
+    """numpy oracle for kernels.pack.pack_cols."""
+    src = np.asarray(src)
+    out = [src[:, o * tile_cols:(o + 1) * tile_cols]
+           for o in np.asarray(tile_offsets)]
+    return np.concatenate(out, axis=1)

@@ -83,3 +83,52 @@ def test_match_path_reflexive(parts):
     """Any concrete path matches itself (property)."""
     p = "/" + "/".join(parts)
     assert match_path(p, p)
+
+
+# ---------------------------------------------------------------------------
+# CoW share-count thread safety
+# ---------------------------------------------------------------------------
+def test_share_race_view_vs_cow_write():
+    """Racing ``view()`` against a CoW write must never tear the
+    (share, buffer) pair: a view taken mid-materialization could otherwise
+    alias the writer's fresh private buffer while holding a stale (or
+    fresh-but-unincremented) ``_Share``, so writes leak across the view
+    boundary.  Fails before the atomic-capture fix in Dataset.view."""
+    import sys
+    import threading
+
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)
+    try:
+        for trial in range(60):
+            f = File("race.h5")
+            src = f.create_dataset("/g", data=np.zeros(32))
+            views = []
+            gate = threading.Barrier(3)
+
+            def viewer():
+                gate.wait()
+                for _ in range(150):
+                    views.append(src.view())
+
+            def writer():
+                gate.wait()
+                for i in range(150):
+                    src[0] = float(i + 1)  # CoW materialize + share swap
+
+            ts = [threading.Thread(target=viewer), threading.Thread(target=writer)]
+            for t in ts:
+                t.start()
+            gate.wait()
+            for t in ts:
+                t.join()
+            # CoW invariant: a write through any view must never reach src.
+            snap = np.array(src.read_direct())
+            for v in views:
+                v[0] = -1.0
+            np.testing.assert_array_equal(np.asarray(src.read_direct()), snap)
+            # and every materialized view is now truly private
+            for v in views:
+                assert not np.shares_memory(v.read_direct(), src.read_direct())
+    finally:
+        sys.setswitchinterval(old)

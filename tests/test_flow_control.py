@@ -115,3 +115,79 @@ tasks:
     events = rep.gantt_events()
     kinds = {e[3] for e in events}
     assert "serve" in kinds and "recv" in kinds  # Fig 5 reconstruction data
+
+
+# ---------------------------------------------------------------------------
+# waiter accounting (latest rendezvous fan-in)
+# ---------------------------------------------------------------------------
+def test_waiter_accounting_dedupes_mux_and_get():
+    """A consumer the VOL mux marked waiting that then blocks in ``get`` on
+    the same channel is ONE waiter, not two registrations."""
+    import threading
+
+    from repro.core.channel import ChannelTimeout
+
+    ch = Channel("w", ("p", 0), ("c", 0), "o.h5", ["/g"], io_freq=-1)
+    observed = []
+    registered = threading.Event()
+
+    def consumer():
+        ch.set_consumer_waiting(True)   # the VOL mux marks us...
+        registered.set()
+        try:
+            with pytest.raises(ChannelTimeout):
+                ch.get(timeout=0.5)     # ...then the same thread blocks in get
+        finally:
+            ch.set_consumer_waiting(False)
+
+    th = threading.Thread(target=consumer)
+    th.start()
+    assert registered.wait(2.0)
+    deadline = time.monotonic() + 2.0
+    while time.monotonic() < deadline and th.is_alive():
+        observed.append(ch.waiting_consumers())
+        time.sleep(0.02)
+    th.join()
+    assert max(observed) == 1           # never double-counted
+    assert ch.waiting_consumers() == 0  # balanced after both exits
+
+
+def test_latest_fanin_rendezvous():
+    """2 producers -> 1 `latest` consumer through the VOL mux: data arrives
+    fresh and in per-producer order, and waiter accounting drains to zero."""
+    yaml = """
+tasks:
+  - func: producer
+    taskCount: 2
+    outports:
+      - filename: o.h5
+        dsets: [{name: /g, memory: 1}]
+  - func: consumer
+    inports:
+      - filename: o.h5
+        io_freq: -1
+        dsets: [{name: /g, memory: 1}]
+"""
+    got = []
+
+    def producer(comm):
+        for t in range(5):
+            with h5.File("o.h5", "w") as f:
+                f.create_dataset("/g", data=np.array([comm.instance * 100 + t]))
+            time.sleep(0.02)
+
+    def consumer():
+        while True:
+            f = h5.File("o.h5", "r")
+            if f is None:
+                break
+            got.append(int(f["/g"][0]))
+
+    w = Wilkins(yaml, {"producer": producer, "consumer": consumer})
+    rep = w.run(timeout=60)
+    assert rep.total_served + rep.total_dropped == 10
+    assert rep.total_served == len(got)
+    for inst in (0, 1):
+        mine = [g for g in got if g // 100 == inst]
+        assert mine == sorted(mine)     # never stale reordering per producer
+    assert all(c.waiting_consumers() == 0 for c in rep.channels)

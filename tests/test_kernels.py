@@ -132,3 +132,29 @@ def test_pack_blocks_dtypes(dtype):
     got = ops.pack_blocks(src, offs, tile_rows=8)
     want = ref.pack_blocks_ref(src, offs, tile_rows=8)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 12),
+    rows=st.sampled_from([8, 16]),
+    cols=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_cols_property(t, rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    n_tiles_src = 16
+    src = jnp.asarray(rng.normal(size=(rows, n_tiles_src * cols)), jnp.float32)
+    offs = jnp.asarray(rng.integers(0, n_tiles_src, size=t), jnp.int32)
+    got = ops.pack_cols(src, offs, tile_cols=cols)
+    want = ref.pack_cols_ref(src, offs, tile_cols=cols)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_pack_cols_dtypes(dtype):
+    src = jnp.arange(8 * 64).reshape(8, 64).astype(dtype)
+    offs = jnp.asarray([7, 0, 3], jnp.int32)
+    got = ops.pack_cols(src, offs, tile_cols=8)
+    want = ref.pack_cols_ref(src, offs, tile_cols=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

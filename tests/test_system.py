@@ -364,3 +364,72 @@ tasks:
     w = Wilkins(yaml, {"sim": sim, "steer": steer})
     w.run(timeout=60)
     assert steps["sim"] == [2.0, 4.0, 8.0]  # steering doubled each step
+
+
+# ---------------------------------------------------------------------------
+# failure paths: error chaining + partial report
+# ---------------------------------------------------------------------------
+def test_run_failure_chains_secondary_errors_and_attaches_report():
+    """Every failing task's error is reachable from the raised exception
+    (__context__ chain), and the partial WorkflowReport rides on it."""
+    from repro.core.driver import WorkflowReport
+
+    yaml = """
+tasks:
+  - func: a
+  - func: b
+"""
+
+    def a():
+        raise ValueError("boom-a")
+
+    def b():
+        time.sleep(0.05)
+        raise KeyError("boom-b")
+
+    w = Wilkins(yaml, {"a": a, "b": b})
+    with pytest.raises((ValueError, KeyError)) as ei:
+        w.run(timeout=30)
+    err = ei.value
+    kinds, e = set(), err
+    while e is not None:
+        kinds.add(type(e))
+        e = e.__context__
+    assert {ValueError, KeyError} <= kinds   # no error silently discarded
+    rep = err.report
+    assert isinstance(rep, WorkflowReport)
+    assert rep.wall_time_s > 0
+    assert {f.error for f in rep.failures} == \
+        {"ValueError: boom-a", "KeyError: 'boom-b'"}
+
+
+def test_run_timeout_attaches_partial_report_and_secondary_errors():
+    """The join-deadline TimeoutError no longer discards the report, and a
+    task error raised before the hang stays chained on it."""
+    yaml = """
+tasks:
+  - func: hang
+  - func: fail
+"""
+    release = threading.Event()
+
+    def hang():
+        release.wait(5.0)
+
+    def fail():
+        raise RuntimeError("early failure")
+
+    w = Wilkins(yaml, {"hang": hang, "fail": fail})
+    with pytest.raises(TimeoutError) as ei:
+        w.run(timeout=0.3)
+    release.set()
+    err = ei.value
+    assert "wilkins-hang-0" in str(err)
+    rep = err.report                       # partial report, not discarded
+    assert rep.channels == [] or rep.channels is w.channels
+    assert [f.error for f in rep.failures] == ["RuntimeError: early failure"]
+    kinds, e = set(), err
+    while e is not None:
+        kinds.add(type(e))
+        e = e.__context__
+    assert RuntimeError in kinds
