@@ -12,6 +12,9 @@ three axes the acceptance criteria name:
 * ``pack``    -- the JAX executor: a cached plan lowered to
   ``kernels.pack.pack_blocks`` scalar-prefetch DMA tiles (interpret mode on
   CPU) vs the numpy scatter executor, checked to the byte.
+* ``pack_nd`` -- a rank-3 reshard on the kernel path: the non-decomposed
+  axes flatten onto the 2-D kernels (no numpy fallback), byte-checked;
+  ``--smoke`` gates that ``pack_mode`` stays non-None and bytes match.
 
 Every row goes through ``common.emit`` and the whole result dict is persisted
 as ``BENCH_redistribute.json`` via ``common.write_json``.
@@ -192,6 +195,41 @@ def bench_pack(rows: int, cols: int, n_src: int = 4, n_dst: int = 3,
             "byte_exact": True}
 
 
+def bench_pack_nd(n0: int, n1: int, n2: int, n_src: int = 4, n_dst: int = 2,
+                  axis: int = 1, iters: int = 3) -> Dict[str, Any]:
+    """Rank-3 reshard on the kernel path: the plan's non-decomposed axes are
+    flattened onto the 2-D pack kernels (no numpy fallback), byte-checked
+    against the numpy scatter executor.  This is the volumetric-field case
+    (WarpX-class workloads) the 2-D-only lowering used to punt on.
+    """
+    import jax.numpy as jnp
+
+    shape = (n0, n1, n2)
+    src_boxes = even_blocks(shape, n_src, axis=axis)
+    dst_boxes = even_blocks(shape, n_dst, axis=axis)
+    plan = CompiledPlan(src_boxes, dst_boxes, shape, np.float32)
+    g = np.arange(int(np.prod(shape)), dtype=np.float32).reshape(shape)
+    gj = jnp.asarray(g)
+
+    with Timer() as t_np:
+        for _ in range(iters):
+            outs = plan.execute_global(g)
+    packed = [np.asarray(a) for a in execute_pack_jax_all(plan, gj)]
+    with Timer() as t_jax:
+        for _ in range(iters):
+            packed = [np.asarray(a) for a in execute_pack_jax_all(plan, gj)]
+    # a mismatch must flow into the --smoke gate, not crash the benchmark
+    byte_exact = all(np.array_equal(a, b) for a, b in zip(outs, packed))
+    emit("redistribute_pack3d_numpy", t_np.dt / iters, "s",
+         f"{shape} axis-{axis} {n_src}->{n_dst} scatter")
+    emit("redistribute_pack3d_pallas", t_jax.dt / iters, "s",
+         f"flattened {plan.pack_mode} lowering (interpret on CPU)")
+    return {"shape": list(shape), "axis": axis, "n_src": n_src,
+            "n_dst": n_dst, "pack_mode": plan.pack_mode,
+            "numpy_s": t_np.dt / iters, "pallas_s": t_jax.dt / iters,
+            "byte_exact": byte_exact}
+
+
 def _run_prefetch(prefetch_on: bool, mib_per_step: float, steps: int,
                   n_prod: int = 4, n_cons: int = 2,
                   compute_iters: int = 3) -> Dict[str, Any]:
@@ -279,15 +317,16 @@ def main(smoke: bool = False) -> Dict[str, Any]:
     smoke = smoke or args.smoke
 
     if smoke:
-        mib, steps, rows = 2.0, 12, 256
+        mib, steps, rows, vol = 2.0, 12, 256, (32, 96, 8)
     else:
-        mib, steps, rows = (args.mib or 64.0), 20, 4096
+        mib, steps, rows, vol = (args.mib or 64.0), 20, 4096, (64, 512, 32)
 
     results = {
         "config": {"smoke": smoke, "mib_per_step": mib, "steps": steps},
         "mxn": bench_mxn(mib, steps),
         "aligned": bench_aligned(mib, steps),
         "pack": bench_pack(rows, 128),
+        "pack_nd": bench_pack_nd(*vol),
         "prefetch": bench_prefetch(mib, steps),
     }
     write_json("redistribute", results)

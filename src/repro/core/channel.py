@@ -41,9 +41,9 @@ import re
 import threading
 import time
 from collections import deque
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -58,6 +58,10 @@ __all__ = [
     "ChannelTimeout",
     "ChannelMux",
     "NO_DATA",
+    "PrefetchPool",
+    "configure_prefetch_pool",
+    "shutdown_prefetch_pool",
+    "DEFAULT_PREFETCH_DEPTH",
 ]
 
 
@@ -96,29 +100,130 @@ class FlowControl:
             return FlowControl.SOME, int(io_freq)
         if io_freq == -1:
             return FlowControl.LATEST, 1
-        raise ValueError(f"invalid io_freq {io_freq}")
+        raise ValueError(
+            f"invalid io_freq {io_freq}: use 0/1 (all), N>1 (some: every "
+            f"Nth step), or -1 (latest)")
 
 
 #: default ring size for per-channel event timelines (satellite: bounded so
 #: ``record_events=True`` cannot grow memory without limit on long runs)
 EVENTS_MAXLEN = 4096
 
-# Small shared executor for asynchronous payload preparation (slab prefetch):
-# channels with a RedistSpec enqueue a *future* of the filtered payload, so
-# slab construction / eager copies / spill writes overlap with both the
-# producer's rendezvous wait and the consumer's compute on the previous step.
-_PREFETCH_POOL: Optional[ThreadPoolExecutor] = None
+#: default per-edge prefetch depth when a redistributing port does not set
+#: ``prefetch: N`` in YAML (max in-flight payload preps on that edge)
+DEFAULT_PREFETCH_DEPTH = 2
+
+
+class PrefetchPool:
+    """Shared executor for asynchronous payload preparation (slab prefetch).
+
+    Channels with a RedistSpec enqueue a *future* of the filtered payload, so
+    slab construction / eager copies / spill writes overlap with both the
+    producer's rendezvous wait and the consumer's compute on the previous
+    step.  Unlike ``concurrent.futures.ThreadPoolExecutor`` (whose non-daemon
+    workers are joined at interpreter exit -- a payload prep stuck in I/O
+    then hangs process shutdown, and a pool nobody shuts down leaks its
+    workers across runs), this pool:
+
+    * runs DAEMON workers, so a wedged prep can never hang interpreter exit;
+    * supports ``shutdown()``: queued-but-unstarted preps are *cancelled*
+      (their futures resolve to CancelledError) and workers drain and stop;
+    * is created per ``Wilkins.run`` (sized to the run's total prefetch
+      depth) and shut down on both the success and error paths --
+      standalone ``Channel`` use falls back to a lazy module-level default.
+    """
+
+    def __init__(self, max_workers: int = 2,
+                 thread_name_prefix: str = "wilkins-prefetch"):
+        self._cv = threading.Condition()
+        self._work: Deque[Tuple[Future, Callable, tuple]] = deque()
+        self._shutdown = False
+        self._threads = [
+            threading.Thread(target=self._worker,
+                             name=f"{thread_name_prefix}-{i}", daemon=True)
+            for i in range(max(1, int(max_workers)))
+        ]
+        for t in self._threads:
+            t.start()
+
+    def submit(self, fn: Callable, *args) -> Future:
+        fut: Future = Future()
+        with self._cv:
+            if self._shutdown:
+                raise RuntimeError("prefetch pool is shut down")
+            self._work.append((fut, fn, args))
+            self._cv.notify()
+        return fut
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                while not self._work and not self._shutdown:
+                    self._cv.wait()
+                if not self._work:
+                    return  # shutdown and drained
+                fut, fn, args = self._work.popleft()
+            if not fut.set_running_or_notify_cancel():
+                continue  # cancelled while queued
+            try:
+                fut.set_result(fn(*args))
+            except BaseException as e:  # surfaced at delivery via fut.result()
+                fut.set_exception(e)
+
+    def shutdown(self, cancel_pending: bool = True) -> None:
+        """Stop accepting work; cancel queued preps; wake and drain workers.
+
+        Running preps are left to finish on their (daemon) worker -- there is
+        no way to interrupt them, but they can no longer block exit."""
+        with self._cv:
+            self._shutdown = True
+            pending = list(self._work) if cancel_pending else []
+            if cancel_pending:
+                self._work.clear()
+            self._cv.notify_all()
+        for fut, _, _ in pending:
+            fut.cancel()
+
+    def alive_workers(self) -> int:
+        return sum(t.is_alive() for t in self._threads)
+
+
+_PREFETCH_POOL: Optional[PrefetchPool] = None
 _PREFETCH_POOL_LOCK = threading.Lock()
 
 
-def _prefetch_pool() -> ThreadPoolExecutor:
+def _prefetch_pool() -> PrefetchPool:
     global _PREFETCH_POOL
     if _PREFETCH_POOL is None:
         with _PREFETCH_POOL_LOCK:
             if _PREFETCH_POOL is None:
-                _PREFETCH_POOL = ThreadPoolExecutor(
-                    max_workers=2, thread_name_prefix="wilkins-prefetch")
+                _PREFETCH_POOL = PrefetchPool(max_workers=2)
     return _PREFETCH_POOL
+
+
+def configure_prefetch_pool(max_workers: int) -> PrefetchPool:
+    """Install a fresh module-default pool (standalone use / tests); any
+    previous default is shut down, its queued preps cancelled.  Workflow
+    runs do NOT go through the global: ``Wilkins.run`` builds its own pool
+    and injects it per channel, so concurrent runs in one process cannot
+    cancel each other's in-flight preps."""
+    global _PREFETCH_POOL
+    with _PREFETCH_POOL_LOCK:
+        old, _PREFETCH_POOL = _PREFETCH_POOL, PrefetchPool(max_workers)
+        pool = _PREFETCH_POOL
+    if old is not None:
+        old.shutdown()
+    return pool
+
+
+def shutdown_prefetch_pool() -> None:
+    """Shut down the module-default pool (cancelling queued preps) and reset
+    the global, so the next standalone use starts from a clean pool."""
+    global _PREFETCH_POOL
+    with _PREFETCH_POOL_LOCK:
+        pool, _PREFETCH_POOL = _PREFETCH_POOL, None
+    if pool is not None:
+        pool.shutdown()
 
 
 @dataclass
@@ -183,7 +288,7 @@ class Channel:
         queue_depth: int = 1,
         zero_copy: bool = True,
         redistribute: Optional[RedistSpec] = None,
-        prefetch: Optional[bool] = None,
+        prefetch: Optional[Union[bool, int]] = None,
         events_maxlen: int = EVENTS_MAXLEN,
     ):
         self.name = name
@@ -201,11 +306,26 @@ class Channel:
         self.queue_depth = int(queue_depth)
         self.zero_copy = bool(zero_copy)
         self.redistribute = redistribute
-        # async payload preparation: on by default exactly when the channel
-        # carries a RedistSpec (slab construction is the serve-side work
-        # worth hiding); the YAML inport knob ``prefetch: 0/1`` overrides
-        self.prefetch = (redistribute is not None) if prefetch is None \
-            else bool(prefetch)
+        # Async payload preparation: ``prefetch`` is the PER-EDGE depth --
+        # the max number of in-flight preps on this channel (0 = synchronous
+        # serve).  On by default (DEFAULT_PREFETCH_DEPTH) exactly when the
+        # channel carries a RedistSpec (slab construction is the serve-side
+        # work worth hiding); the YAML inport knob ``prefetch: N`` overrides
+        # (0 = off, N >= 1 = depth).  Depth is enforced by a per-channel
+        # semaphore over the shared sized pool, so one hot edge cannot
+        # monopolize every prefetch worker.
+        if prefetch is None:
+            depth = DEFAULT_PREFETCH_DEPTH if redistribute is not None else 0
+        elif isinstance(prefetch, bool):
+            depth = DEFAULT_PREFETCH_DEPTH if prefetch else 0
+        else:
+            depth = int(prefetch)
+        if depth < 0:
+            raise ValueError(f"prefetch depth must be >= 0, got {depth}")
+        self.prefetch = depth
+        self._prefetch_sem = threading.BoundedSemaphore(depth) if depth else None
+        # run-scoped pool injected by the driver (None = module default)
+        self._prefetch_pool: Optional[PrefetchPool] = None
 
         # precompiled matchers (LRU-cached globally, pinned here for the hot path)
         self._file_matcher = compile_file_pattern(filename_pattern)
@@ -235,6 +355,11 @@ class Channel:
             if ev.maxlen is not None and len(ev) == ev.maxlen:
                 self.stats.events_dropped += 1
             ev.append((time.monotonic(), who, what))
+
+    def set_prefetch_pool(self, pool: Optional["PrefetchPool"]) -> None:
+        """Attach the run-scoped prefetch pool (driver-owned); ``None``
+        detaches and falls back to the lazy module default."""
+        self._prefetch_pool = pool
 
     def add_listener(self, mux: ChannelMux) -> None:
         with self._lock:
@@ -371,12 +496,15 @@ class Channel:
         payload across every fan-out channel with the same dataset selection:
         each channel ships a structural ``File.view()`` over the same buffers.
 
-        Prefetching channels (``self.prefetch``, default for redistributing
-        ports) enqueue a *future* of the payload instead: ``_prepare`` runs
-        on the shared prefetch executor, overlapping slab construction with
-        this producer's rendezvous wait and with the consumer's compute on
-        the step it is still holding.  Payload bytes are then accounted at
-        delivery time (``_deliver``), when the future's size is known.
+        Prefetching channels (``self.prefetch`` > 0, default for
+        redistributing ports) enqueue a *future* of the payload instead:
+        ``_prepare`` runs on the shared prefetch pool, overlapping slab
+        construction with this producer's rendezvous wait and with the
+        consumer's compute on the step it is still holding.  At most
+        ``self.prefetch`` preps are in flight per edge (per-channel
+        semaphore); a producer outrunning its own preps blocks here.
+        Payload bytes are then accounted at delivery time (``_deliver``),
+        when the future's size is known.
         """
         with self._lock:
             self._close_count += 1
@@ -392,9 +520,19 @@ class Channel:
                 return False
 
         if self.prefetch:
-            payload: Tuple[str, Any] = (
-                "future", _prefetch_pool().submit(self._prepare_timed, f,
-                                                  _payload_cache))
+            # per-edge depth: block until one of this channel's in-flight
+            # preps completes (backpressure), never starving other edges
+            # of pool workers
+            self._prefetch_sem.acquire()
+            try:
+                pool = self._prefetch_pool or _prefetch_pool()
+                fut = pool.submit(self._prepare_timed, f, _payload_cache)
+            except BaseException:
+                self._prefetch_sem.release()
+                raise
+            # release on completion, error, or shutdown-cancel alike
+            fut.add_done_callback(lambda _fut: self._prefetch_sem.release())
+            payload: Tuple[str, Any] = ("future", fut)
             payload_bytes = None
         else:
             payload, payload_bytes = self._prepare(f, _payload_cache)

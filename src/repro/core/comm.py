@@ -19,9 +19,11 @@ so the code is, again, identical in both settings.
 subsystem (paper §3.4): the driver wires each task's declared ``RedistSpec``s
 onto the communicator, so task code reshards a device array / numpy array /
 received Dataset into its per-rank blocks with ONE call -- no plan objects,
-no executor choice.  Device-resident 2-D arrays go through the Pallas pack
-kernels (row or column tiles); everything else takes the numpy scatter
-executors.  Plans come from the process-wide ``PlanCache``.
+no executor choice.  Device-resident buffers (any rank, global extent or a
+received slab) go through the Pallas pack kernels -- rank>2 plans flatten
+their non-decomposed axes onto the 2-D kernels; host buffers and genuinely
+cross-axis N-D decompositions take the numpy scatter executors.  Plans come
+from the process-wide ``PlanCache``.
 """
 
 from __future__ import annotations
@@ -56,7 +58,13 @@ class TaskComm:
 
     def mesh(self, shape: Optional[Tuple[int, ...]] = None,
              axes: Optional[Tuple[str, ...]] = None):
-        """Build a Mesh over this task's restricted device group."""
+        """Build a Mesh over this task's restricted device group.
+
+        ``shape`` must fit inside the restricted world: asking for more
+        devices than the driver granted this task raises a clear
+        ``ValueError`` (instead of an opaque numpy reshape error) -- the fix
+        is a bigger ``nprocs`` share in the workflow YAML, not a code change.
+        """
         import numpy as np
         import jax
 
@@ -65,9 +73,17 @@ class TaskComm:
             devs = jax.devices()[:1]
         if shape is None:
             shape = (len(devs),)
+        shape = tuple(int(s) for s in shape)
+        need = int(np.prod(shape)) if shape else 1
+        if need > len(devs):
+            raise ValueError(
+                f"task {self.task!r}: mesh shape {shape} needs {need} "
+                f"devices but this task's restricted device group holds "
+                f"only {len(devs)}; grow the task's nprocs share (or shrink "
+                f"the mesh)")
         if axes is None:
             axes = self.mesh_axes[: len(shape)]
-        arr = np.asarray(devs[: int(np.prod(shape))]).reshape(shape)
+        arr = np.asarray(devs[:need]).reshape(shape)
         return jax.sharding.Mesh(arr, axes)
 
     def barrier(self) -> None:  # single-process runtime: no-op
@@ -132,11 +148,20 @@ class TaskComm:
 
         Returns the per-rank block list aligned to ``ranks`` (jax arrays on
         the pack path, numpy arrays on the scatter path).
+
+        Executor dispatch: the Pallas pack kernels serve any device-resident
+        buffer (a ``jax.Array``, or a Dataset whose backing buffer lives on
+        device) whose plan is decomposed along a single axis -- any rank
+        (rank>2 plans flatten onto the 2-D kernels, see
+        ``redistribute.PackGeometry``), over the global extent OR a received
+        slab (gathers then run in slab-local source coordinates).  Only
+        host-resident data and genuinely cross-axis N-D decompositions take
+        the numpy scatter executors.
         """
         import numpy as np
 
         from .datamodel import Dataset
-        from .redistribute import execute_pack_jax, plan_cache
+        from .redistribute import execute_pack_jax_all, intersect, plan_cache
 
         if prefer not in ("auto", "pack", "numpy"):
             raise ValueError(f"prefer must be auto|pack|numpy, got {prefer!r}")
@@ -183,39 +208,50 @@ class TaskComm:
                              f"{len(dst)}-block decomposition of {rspec}")
         plan = plan_cache().get(src_boxes, dst, gshape, arr.dtype)
 
-        is_jax = False
-        if prefer != "numpy":
-            try:
-                import jax
-                is_jax = isinstance(data, jax.Array)
-            except ImportError:  # numpy-only deployment
-                pass
-        can_pack = (is_jax and slab_box is None and plan.pack_mode is not None
-                    and tuple(arr.shape) == plan.shape)
-        if prefer == "pack" and not can_pack:
-            raise ValueError(
-                "pack-kernel path unavailable: needs a jax.Array over the "
-                f"global extent and a row/col-lowerable plan (got "
-                f"type={type(data).__name__}, shape={tuple(arr.shape)}, "
-                f"pack_mode={plan.pack_mode!r}, slab={slab_box is not None})")
-        if can_pack:
-            from .redistribute import _pad_to_tiles
-            mode = plan.pack_mode
-            padded = _pad_to_tiles(arr, tile_rows, 0 if mode == "rows" else 1)
-            return [execute_pack_jax(plan, r, padded, tile_rows=tile_rows,
-                                     mode=mode) for r in wanted]
-
-        np_arr = np.asarray(arr)
         if slab_box is not None:
-            # scatter straight out of the slab; every wanted dst box must sit
-            # inside it (an instance reshards what it was shipped)
-            from .redistribute import intersect
+            # an instance reshards what it was shipped: every wanted dst box
+            # must sit inside the received slab (kernel and numpy path alike)
             for r in wanted:
                 if intersect(dst[r], slab_box) != dst[r]:
                     raise ValueError(
                         f"dst rank {r} block {dst[r]} is not covered by the "
                         f"received slab {slab_box}; reshard the slab only "
                         f"onto ranks {list(rspec.my_ranks())}")
+
+        # Probe the READ BUFFER, not the wrapper: a Dataset backed by a
+        # device array reshards on the kernel path exactly like a raw
+        # jax.Array (checking `data` here used to silently drop every
+        # device-resident Dataset onto the numpy executors).
+        is_jax = False
+        if prefer != "numpy":
+            try:
+                import jax
+                is_jax = isinstance(arr, jax.Array)
+            except ImportError:  # numpy-only deployment
+                pass
+        geom = plan.pack_geometry
+        slab_pack_ok = slab_box is None or (
+            geom is not None and geom.covers_slab(slab_box, gshape))
+        expect_shape = plan.shape if slab_box is None else tuple(slab_box[1])
+        can_pack = (is_jax and geom is not None and slab_pack_ok
+                    and tuple(arr.shape) == expect_shape)
+        if prefer == "pack" and not can_pack:
+            raise ValueError(
+                "pack-kernel path unavailable: needs a device-resident "
+                "buffer (jax.Array or device-backed Dataset) over the "
+                "global extent or a received slab, and a single-axis "
+                f"lowerable plan (got type={type(data).__name__}, "
+                f"buffer={type(arr).__name__}, shape={tuple(arr.shape)}, "
+                f"pack_mode={plan.pack_mode!r}, slab={slab_box!r})")
+        from .datamodel import transport_stats
+        transport_stats().record_reshard(pack=can_pack)
+        if can_pack:
+            return execute_pack_jax_all(plan, arr, tile_rows=tile_rows,
+                                        slab_box=slab_box, ranks=wanted)
+
+        np_arr = np.asarray(arr)
+        if slab_box is not None:
+            # scatter straight out of the slab (src_boxes == [slab_box])
             return plan.execute([np_arr], ranks=wanted)
         return plan.execute_global(np_arr, ranks=wanted)
 

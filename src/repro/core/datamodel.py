@@ -42,6 +42,7 @@ import io
 import json
 import os
 import re
+import sys
 import threading
 from dataclasses import dataclass, field
 from functools import lru_cache
@@ -55,6 +56,7 @@ __all__ = [
     "File",
     "BlockOwnership",
     "TransportStats",
+    "is_device_array",
     "transport_stats",
     "reset_transport_stats",
     "match_path",
@@ -66,6 +68,27 @@ __all__ = [
 
 _SPILL_MAGIC = b"WLKNRAW1"
 _SPILL_ALIGN = 64
+
+
+def is_device_array(a: Any) -> bool:
+    """True for a JAX device array (device-resident Dataset buffers).
+
+    Checked via ``sys.modules`` so importing the data model never drags jax
+    in: if jax was never imported, no caller can have produced a jax array.
+    Device buffers are immutable by construction, so the CoW layer treats
+    them as permanently shared -- reads alias them directly and any write
+    first materializes a private numpy copy.
+    """
+    if isinstance(a, np.ndarray):
+        return False
+    jax = sys.modules.get("jax")
+    return jax is not None and isinstance(a, jax.Array)
+
+
+def _writable_in_place(a: Any) -> bool:
+    """Can this buffer be mutated where it sits?  Never true for device
+    arrays (immutable) -- only for writable host ndarrays."""
+    return isinstance(a, np.ndarray) and a.flags.writeable
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +130,11 @@ class TransportStats:
         self.prefetch_misses = 0
         self.prefetch_prepared_s = 0.0
         self.prefetch_blocked_s = 0.0
+        # TaskComm.reshard executor dispatch: how many calls ran on the
+        # Pallas pack kernels vs the numpy scatter executors (the benchmark
+        # and tests assert "no numpy fallback" through these)
+        self.reshard_pack = 0
+        self.reshard_numpy = 0
 
     def record_copy(self, nbytes: int, cow: bool = False) -> None:
         with self._lock:
@@ -122,6 +150,13 @@ class TransportStats:
     def record_prefetch_prepare(self, elapsed_s: float) -> None:
         with self._lock:
             self.prefetch_prepared_s += float(elapsed_s)
+
+    def record_reshard(self, pack: bool) -> None:
+        with self._lock:
+            if pack:
+                self.reshard_pack += 1
+            else:
+                self.reshard_numpy += 1
 
     def record_prefetch(self, hit: bool, blocked_s: float = 0.0) -> None:
         with self._lock:
@@ -158,6 +193,8 @@ class TransportStats:
                 "prefetch_misses": self.prefetch_misses,
                 "prefetch_prepared_s": self.prefetch_prepared_s,
                 "prefetch_blocked_s": self.prefetch_blocked_s,
+                "reshard_pack": self.reshard_pack,
+                "reshard_numpy": self.reshard_numpy,
             }
 
     def reset(self) -> None:
@@ -168,6 +205,7 @@ class TransportStats:
             self.redist_aligned = self.redist_slabs = 0
             self.prefetch_hits = self.prefetch_misses = 0
             self.prefetch_prepared_s = self.prefetch_blocked_s = 0.0
+            self.reshard_pack = self.reshard_numpy = 0
 
 
 _TRANSPORT_STATS = TransportStats()
@@ -317,9 +355,13 @@ class Dataset:
         self.ownership: Optional[BlockOwnership] = None
         self._share = _Share(1)
         if data is not None:
-            # keep subclasses (np.memmap) intact on the zero-copy path
-            arr = data if isinstance(data, np.ndarray) else np.asarray(data)
-            assert arr.shape == self.shape, (arr.shape, self.shape)
+            # keep subclasses (np.memmap) and device arrays intact on the
+            # zero-copy path; everything else coerces to ndarray
+            if isinstance(data, np.ndarray) or is_device_array(data):
+                arr = data
+            else:
+                arr = np.asarray(data)
+            assert tuple(arr.shape) == self.shape, (arr.shape, self.shape)
             if copy:
                 # Snapshot the caller's array into the file (h5py semantics).
                 # Adopting a caller-owned buffer would hand the CoW layer an
@@ -402,16 +444,18 @@ class Dataset:
         share = self._share
         with share.lock:
             return share is self._share and share.count == 1 \
-                and self._data.flags.writeable
+                and _writable_in_place(self._data)
 
     def _ensure_writable(self) -> None:
-        """Materialize a private copy if the buffer is shared or read-only."""
+        """Materialize a private copy if the buffer is shared or read-only
+        (memmap, device array -- device buffers are immutable, so a write
+        always lands in a private host copy)."""
         while True:
             share = self._share
             with share.lock:
                 if share is not self._share:
                     continue  # a concurrent writer swapped us; re-read
-                if share.count == 1 and self._data.flags.writeable:
+                if share.count == 1 and _writable_in_place(self._data):
                     return
                 # Copy AND swap while holding the share lock: a sibling
                 # sharer must not pass its own count==1 fast path and write
@@ -441,7 +485,14 @@ class Dataset:
         self._data[key] = value
 
     def read_direct(self) -> np.ndarray:
-        """The backing array; a read-only alias while the buffer is shared."""
+        """The backing array; a read-only alias while the buffer is shared.
+
+        Device-resident buffers (jax arrays) are immutable by construction
+        and are returned as-is -- callers see a ``jax.Array`` and may hand it
+        straight to the pack-kernel executors without a host round-trip.
+        """
+        if is_device_array(self._data):
+            return self._data
         if self._is_exclusive():
             return self._data
         alias = self._data.view()
@@ -507,9 +558,9 @@ class Group:
             raise ValueError("empty dataset path")
         parent = self.require_group("/".join(comps[:-1])) if len(comps) > 1 else self
         if data is not None:
-            if not isinstance(data, np.ndarray):
+            if not isinstance(data, np.ndarray) and not is_device_array(data):
                 data = np.asarray(data)
-            shape = data.shape if shape is None else tuple(shape)
+            shape = tuple(data.shape) if shape is None else tuple(shape)
             dtype = data.dtype if dtype is None else dtype
         if shape is None or dtype is None:
             raise ValueError("need shape+dtype or data")
@@ -664,6 +715,8 @@ class File(Group):
                 off = data_start + meta["datasets"][p]["offset"]
                 f.write(b"\0" * (off - f.tell()))
                 arr = ds.read_direct()
+                if is_device_array(arr):
+                    arr = np.asarray(arr)  # spill needs host bytes
                 if not arr.flags.c_contiguous:
                     arr = np.ascontiguousarray(arr)
                 f.write(memoryview(arr).cast("B"))

@@ -30,10 +30,11 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from . import actions as actions_mod
-from .channel import Channel
+from .channel import Channel, PrefetchPool
 from .comm import TaskComm, pop_comm, push_comm
+from .datamodel import transport_stats
 from .graph import WorkflowGraph
-from .redistribute import RedistSpec
+from .redistribute import RedistSpec, plan_cache
 from .vol import VOL, pop_vol, push_vol
 
 __all__ = ["Wilkins", "WorkflowReport", "TaskFailure"]
@@ -54,6 +55,12 @@ class WorkflowReport:
     task_launches: Dict[Tuple[str, int], int] = field(default_factory=dict)
     channels: List[Channel] = field(default_factory=list)
     failures: List[TaskFailure] = field(default_factory=list)
+    # end-of-run snapshots of the PROCESS-WIDE transport / plan-cache
+    # counters (prefetch hit/miss + overlap seconds, redistribution bytes,
+    # compiled-plan reuse) -- filled by ``Wilkins.run`` on success and on
+    # both failure paths, so ``err.report.summary()`` shows them too
+    transport: Dict[str, Any] = field(default_factory=dict)
+    plan_cache: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def total_bytes_moved(self) -> int:
@@ -80,9 +87,29 @@ class WorkflowReport:
             f"served={self.total_served} dropped={self.total_dropped} "
             f"bytes={self.total_bytes_moved}",
         ]
-        for (task, inst), t in sorted(self.task_times.items()):
+        t = self.transport
+        if t:
             lines.append(
-                f"  {task}[{inst}]: {t:.3f}s launches={self.task_launches.get((task, inst), 1)}"
+                f"prefetch: hits={t['prefetch_hits']} "
+                f"misses={t['prefetch_misses']} "
+                f"prepared_s={t['prefetch_prepared_s']:.3f} "
+                f"blocked_s={t['prefetch_blocked_s']:.3f}")
+            lines.append(
+                f"redist: planned={t['redist_planned_bytes']} "
+                f"shipped={t['redist_shipped_bytes']} "
+                f"baseline={t['redist_baseline_bytes']} "
+                f"aligned={t['redist_aligned']} slabs={t['redist_slabs']} "
+                f"reshard_pack={t['reshard_pack']} "
+                f"reshard_numpy={t['reshard_numpy']}")
+        pc = self.plan_cache
+        if pc:
+            lines.append(
+                f"plan_cache: size={pc['size']} hits={pc['hits']} "
+                f"misses={pc['misses']} evictions={pc['evictions']} "
+                f"hit_rate={pc['hit_rate']:.2f}")
+        for (task, inst), secs in sorted(self.task_times.items()):
+            lines.append(
+                f"  {task}[{inst}]: {secs:.3f}s launches={self.task_launches.get((task, inst), 1)}"
             )
         for f in self.failures:
             lines.append(f"  FAILURE {f.task}[{f.instance}] attempt={f.attempt}: {f.error}")
@@ -109,6 +136,12 @@ class Wilkins:
                    dataset views and fan-out shares one filtered payload.
                    False restores the legacy materialize-per-channel copies
                    (the benchmark baseline).  See DESIGN.md.
+
+    ``run()`` owns the prefetch-executor lifecycle: a fresh ``PrefetchPool``
+    sized to the workflow's total per-edge prefetch depth is injected into
+    this run's channels at start and shut down (queued preps cancelled,
+    channels detached) on success and error paths alike -- per run, so
+    concurrent runs in one process never cancel each other's preps.
     """
 
     def __init__(
@@ -317,42 +350,66 @@ class Wilkins:
                 # unblock everyone coupled to us
                 self.vols[(name, inst)].finalize()
 
+        # Prefetch executor lifecycle is tied to THIS run: a fresh pool
+        # sized to the run's total per-edge depth is injected into this
+        # run's channels up front and torn down (queued preps cancelled,
+        # channels detached) on success and error paths alike -- the old
+        # process-wide executor was never shut down, so its non-daemon
+        # workers leaked across runs and a prep stuck in I/O could hang
+        # interpreter exit.  The pool is PER RUN, not the module global:
+        # concurrent Wilkins runs in one process must not cancel each
+        # other's in-flight preps.
+        total_depth = sum(ch.prefetch for ch in self.channels)
+        pool: Optional[PrefetchPool] = None
+        if total_depth:
+            pool = PrefetchPool(max_workers=max(2, min(16, total_depth)),
+                                thread_name_prefix="wilkins-prefetch-run")
+            for ch in self.channels:
+                ch.set_prefetch_pool(pool)
         t0 = time.monotonic()
-        for name, t in self.graph.tasks.items():
-            for i in range(t.task_count):
-                th = threading.Thread(
-                    target=runner, args=(name, i), name=f"wilkins-{name}-{i}", daemon=True
-                )
-                threads.append(th)
-        for th in threads:
-            th.start()
-        # One global deadline across ALL joins: a per-thread timeout would let
-        # a hung workflow take N_threads x timeout to fail.
-        deadline = None if timeout is None else time.monotonic() + timeout
-        hung: List[str] = []
-        for th in threads:
-            remaining = None
-            if deadline is not None:
-                remaining = max(0.0, deadline - time.monotonic())
-            th.join(timeout=remaining)
-            if th.is_alive():
-                hung.append(th.name)
-        report.wall_time_s = time.monotonic() - t0
-        # Both failure paths carry the partial WorkflowReport (channel stats,
-        # gantt events, per-task failures) as ``err.report``, and every
-        # secondary task error stays reachable via the __context__ chain --
-        # raising only errors[0] used to silently discard the rest.
-        if hung:
-            err: BaseException = TimeoutError(
-                f"task threads did not finish before the deadline: {hung}")
-            err = _chain_errors(err, errors)
-            err.report = report  # type: ignore[attr-defined]
-            raise err
-        if errors:
-            primary = _chain_errors(errors[0], errors[1:])
-            primary.report = report  # type: ignore[attr-defined]
-            raise primary
-        return report
+        try:
+            for name, t in self.graph.tasks.items():
+                for i in range(t.task_count):
+                    th = threading.Thread(
+                        target=runner, args=(name, i), name=f"wilkins-{name}-{i}", daemon=True
+                    )
+                    threads.append(th)
+            for th in threads:
+                th.start()
+            # One global deadline across ALL joins: a per-thread timeout would
+            # let a hung workflow take N_threads x timeout to fail.
+            deadline = None if timeout is None else time.monotonic() + timeout
+            hung: List[str] = []
+            for th in threads:
+                remaining = None
+                if deadline is not None:
+                    remaining = max(0.0, deadline - time.monotonic())
+                th.join(timeout=remaining)
+                if th.is_alive():
+                    hung.append(th.name)
+            report.wall_time_s = time.monotonic() - t0
+            report.transport = transport_stats().snapshot()
+            report.plan_cache = plan_cache().snapshot()
+            # Both failure paths carry the partial WorkflowReport (channel
+            # stats, gantt events, per-task failures) as ``err.report``, and
+            # every secondary task error stays reachable via the __context__
+            # chain -- raising only errors[0] used to silently discard the rest.
+            if hung:
+                err: BaseException = TimeoutError(
+                    f"task threads did not finish before the deadline: {hung}")
+                err = _chain_errors(err, errors)
+                err.report = report  # type: ignore[attr-defined]
+                raise err
+            if errors:
+                primary = _chain_errors(errors[0], errors[1:])
+                primary.report = report  # type: ignore[attr-defined]
+                raise primary
+            return report
+        finally:
+            if pool is not None:
+                pool.shutdown()
+                for ch in self.channels:
+                    ch.set_prefetch_pool(None)
 
 
 def _chain_errors(

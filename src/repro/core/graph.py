@@ -53,7 +53,9 @@ class DsetSpec:
 class Port:
     filename: str
     dsets: List[DsetSpec]
-    io_freq: int = 1      # flow control (inports only)
+    io_freq: int = 1      # flow control (inports only): 0/1 = all, N>1 =
+                          # some (every Nth), -1 = latest; anything else is
+                          # rejected at parse time with the task/port named
     queue_depth: int = 1  # channel ring-queue depth (inports only); 1 = paper
                           # rendezvous, >=2 pipelines producer ahead of consumer
     redistribute: bool = False  # M->N planning on this inport: the consumer's
@@ -61,9 +63,11 @@ class Port:
                                 # matched dataset and the channel ships only
                                 # the owned blocks (paper §3.2.2 / LowFive)
     redist_axis: int = 0        # decomposition axis of the owned blocks
-    prefetch: Optional[bool] = None  # inport knob: overlap slab serving with
-                                     # consumer compute (None = on whenever
-                                     # the port redistributes)
+    prefetch: Optional[int] = None  # inport knob: per-edge prefetch DEPTH --
+                                    # max in-flight async payload preps on
+                                    # each channel of this port (0 = sync
+                                    # serve; None = default depth whenever
+                                    # the port redistributes)
     ownership: bool = False     # outports only: the producer's logical ranks
                                 # own an even decomposition of every written
                                 # dataset; the VOL stamps BlockOwnership at
@@ -103,7 +107,7 @@ class Edge:
     queue_depth: int = 1
     redistribute: bool = False  # consumer inport declared M->N ownership
     redist_axis: int = 0
-    prefetch: Optional[bool] = None  # consumer inport's async-serve knob
+    prefetch: Optional[int] = None  # consumer inport's per-edge prefetch depth
 
     def instance_links(self, np_: int, nc: int) -> List[Tuple[int, int]]:
         """Round-robin instance pairing over the longer list (paper Fig. 3)."""
@@ -111,7 +115,7 @@ class Edge:
         return [(i % np_, i % nc) for i in range(n)]
 
 
-def _parse_port(p: Dict[str, Any]) -> Port:
+def _parse_port(p: Dict[str, Any], task: str = "?") -> Port:
     dsets = [
         DsetSpec(
             name=d["name"],
@@ -125,6 +129,16 @@ def _parse_port(p: Dict[str, Any]) -> Port:
     qd = int(p.get("queue_depth", 1))
     if qd < 1:
         raise ValueError(f"queue_depth must be >= 1, got {qd}")
+    # Flow control is validated HERE, with the task and port named -- by the
+    # time a bad value used to reach FlowControl.from_io_freq (at channel
+    # construction, deep inside the driver) the error no longer said which
+    # YAML line to fix, and a typo'd -2 read like a runtime bug.
+    io_freq = int(p.get("io_freq", 1))
+    if io_freq < -1:
+        raise ValueError(
+            f"task {task!r} port {p['filename']!r}: io_freq {io_freq} is "
+            f"invalid; use 0/1 (all), N>1 (some: every Nth step), or -1 "
+            f"(latest)")
     # ``redistribute: 1`` or ``redistribute: {axis: A}`` on a consumer inport
     redist = p.get("redistribute", 0)
     axis = 0
@@ -135,9 +149,17 @@ def _parse_port(p: Dict[str, Any]) -> Port:
         redist = bool(int(redist or 0))
     if axis < 0:
         raise ValueError(f"redistribute axis must be >= 0, got {axis}")
+    # ``prefetch: N`` on a consumer inport: per-edge async-prep depth
+    # (0 = synchronous serve, N >= 1 = at most N in-flight preps per
+    # channel).  YAML booleans pass through untouched so the legacy
+    # ``prefetch: true`` spelling keeps meaning "default depth", not 1.
     prefetch = p.get("prefetch")
-    if prefetch is not None:
-        prefetch = bool(int(prefetch))
+    if prefetch is not None and not isinstance(prefetch, bool):
+        prefetch = int(prefetch)
+        if prefetch < 0:
+            raise ValueError(
+                f"task {task!r} port {p['filename']!r}: prefetch depth must "
+                f"be >= 0 (0 = sync serve, N = per-edge depth), got {prefetch}")
     # ``ownership: 1`` or ``ownership: {axis: A, nranks: K}`` on an outport
     own = p.get("ownership", 0)
     own_axis, own_nranks = 0, None
@@ -160,7 +182,7 @@ def _parse_port(p: Dict[str, Any]) -> Port:
         raise ValueError(
             f"port {p['filename']!r}: ownership nranks must be >= 1, got {own_nranks}")
     return Port(filename=p["filename"], dsets=dsets,
-                io_freq=int(p.get("io_freq", 1)), queue_depth=qd,
+                io_freq=io_freq, queue_depth=qd,
                 redistribute=redist, redist_axis=axis, prefetch=prefetch,
                 ownership=own, own_axis=own_axis, own_nranks=own_nranks)
 
@@ -178,8 +200,8 @@ def _parse_task(t: Dict[str, Any]) -> TaskSpec:
         nwriters=int(t["nwriters"]) if "nwriters" in t else (
             int(t["io_proc"]) if "io_proc" in t else None),
         actions=actions,
-        inports=[_parse_port(p) for p in t.get("inports", [])],
-        outports=[_parse_port(p) for p in t.get("outports", [])],
+        inports=[_parse_port(p, t["func"]) for p in t.get("inports", [])],
+        outports=[_parse_port(p, t["func"]) for p in t.get("outports", [])],
         raw=dict(t),
     )
     for p in spec.inports:

@@ -16,9 +16,15 @@ the executors the transport hot path runs:
 * scatter executor   -- ``CompiledPlan.execute`` writes straight into
   preallocated per-rank destination blocks from per-rank source blocks; no
   global-array materialization, one numpy slice copy per coalesced run.
-* JAX pack executor  -- ``execute_pack_jax`` lowers a cached plan's row runs
-  to ``kernels.pack.pack_blocks`` scalar-prefetch DMA tiles (interpret mode
-  on CPU, Mosaic on TPU) for device-resident reshard.
+* JAX pack executor  -- ``execute_pack_jax`` lowers a cached plan's runs
+  to ``kernels.pack`` scalar-prefetch DMA tiles (interpret mode on CPU,
+  Mosaic on TPU) for device-resident reshard.  Rank>2 plans decomposed
+  along ONE axis are lowered by *flattening* the non-decomposed axes into a
+  virtual row/column dimension (``PackGeometry``) -- the kernels stay 2-D;
+  only genuinely cross-axis N-D decompositions fall back to the numpy
+  scatter executors.  ``slab_box`` runs the same gathers in *slab-local*
+  source coordinates, so a consumer holding only its received slab (not the
+  global extent) still reshards on device.
 * ``reshard_jax``    -- resharding a ``jax.Array`` from the producer task's
   mesh layout onto the consumer task's mesh (``device_put`` with a target
   ``NamedSharding``; on a real pod XLA turns this into ICI transfers).
@@ -47,6 +53,7 @@ __all__ = [
     "plan_redistribution",
     "coalesce_transfers",
     "CompiledPlan",
+    "PackGeometry",
     "PlanCache",
     "plan_cache",
     "reset_plan_cache",
@@ -162,6 +169,59 @@ def coalesce_transfers(
     return out
 
 
+@dataclass(frozen=True)
+class PackGeometry:
+    """How a single-axis N-D plan flattens onto the 2-D pack kernels.
+
+    The kernels (``pack_blocks`` / ``pack_cols``) DMA row/column tiles of a
+    2-D buffer.  An N-D plan whose every coalesced run spans the full extent
+    of all axes except one (``axis``) is equivalent to a 2-D gather on a
+    reshaped view of the same row-major bytes:
+
+    * ``axis == 0``  -> ``mode="rows"``: view ``(shape[0], prod(shape[1:]))``;
+      runs along axis 0 map 1:1 to row runs (``scale == 1``).
+    * ``axis  > 0``  -> ``mode="cols"``: view
+      ``(prod(shape[:axis]), shape[axis] * inner)`` with
+      ``inner = prod(shape[axis+1:])``; a run of ``cnt`` indices starting at
+      ``start`` along ``axis`` maps to the contiguous column run
+      ``(start * scale, cnt * scale)`` with ``scale == inner``.
+
+    This is the flatten transform; unflattening a gathered 2-D block back to
+    the N-D destination block is a plain ``reshape`` (the bytes are already
+    in row-major destination order).
+    """
+
+    axis: int    # decomposed axis in the N-D frame
+    mode: str    # "rows" | "cols" -- which kernel tile layout serves it
+    rows: int    # flattened view rows
+    cols: int    # flattened view cols
+    scale: int   # flattened units per index along ``axis`` (1 in rows mode)
+
+    def covers_slab(self, slab_box: Box, shape: Sequence[int]) -> bool:
+        """Can the kernel lowering gather from this slab?  True when the
+        slab spans the full extent of every NON-decomposed axis (the shape
+        a 1-D decomposition slot always has) -- the single source of truth
+        for both the reshard dispatch predicate and the executor's
+        validation."""
+        starts, sshape = slab_box
+        return all(
+            s == 0 and n == shape[a]
+            for a, (s, n) in enumerate(zip(starts, sshape))
+            if a != self.axis)
+
+
+def _geometry_for_axis(shape: Sequence[int], axis: int) -> PackGeometry:
+    shape = tuple(int(s) for s in shape)
+    if axis == 0:
+        return PackGeometry(axis=0, mode="rows", rows=shape[0],
+                            cols=int(np.prod(shape[1:], dtype=np.int64)),
+                            scale=1)
+    inner = int(np.prod(shape[axis + 1:], dtype=np.int64)) if axis + 1 < len(shape) else 1
+    return PackGeometry(axis=axis, mode="cols",
+                        rows=int(np.prod(shape[:axis], dtype=np.int64)),
+                        cols=shape[axis] * inner, scale=inner)
+
+
 class CompiledPlan:
     """A redistribution plan compiled once for a (src, dst, shape, dtype) key.
 
@@ -177,7 +237,7 @@ class CompiledPlan:
 
     __slots__ = ("src", "dst", "shape", "dtype", "per_dst", "per_dst_runs",
                  "transfers", "identity", "aligned", "nbytes_planned",
-                 "_pack_cache", "_pack_lock", "_pack_mode")
+                 "_pack_cache", "_pack_lock", "_pack_geom")
 
     def __init__(self, src: Sequence[Box], dst: Sequence[Box],
                  shape: Sequence[int], dtype: Any = np.float64):
@@ -209,9 +269,9 @@ class CompiledPlan:
         self.nbytes_planned = (
             sum(t.nbytes_factor for t in self.transfers) * self.dtype.itemsize
         )
-        self._pack_cache: Dict[Tuple[int, int, str], Tuple[np.ndarray, Tuple[Tuple[int, int], ...]]] = {}
+        self._pack_cache: Dict[Tuple[int, int, str, int], Tuple[np.ndarray, Tuple[Tuple[int, int], ...]]] = {}
         self._pack_lock = threading.Lock()
-        self._pack_mode = self._compute_pack_mode()
+        self._pack_geom = self._compute_pack_geometry()
 
     # ------------------------------------------------------------- executors
     def dst_bytes(self, ranks: Sequence[int]) -> int:
@@ -283,82 +343,114 @@ class CompiledPlan:
         return list(out)
 
     # ----------------------------------------------------- pack-kernel lowering
-    def _compute_pack_mode(self) -> Optional[str]:
-        """Which pack-kernel layout covers this plan, if any.
+    def _compute_pack_geometry(self) -> Optional[PackGeometry]:
+        """The flatten geometry covering this plan, if any.
 
-        ``"rows"`` when every coalesced run is a full-width row slab (axis-0
-        decompositions), ``"cols"`` when every run is a full-height column
-        slab (axis-1), ``None`` for plans the kernel cannot DMA (non-2-D or
-        mixed-axis tilings -- those take the numpy scatter executors).
+        A plan is kernel-lowerable when every coalesced run spans the full
+        extent of every axis except ONE -- any rank >= 2, any single
+        decomposed axis.  Axis 0 lowers to row tiles, any other axis to
+        column tiles of the flattened view (see ``PackGeometry``).  ``None``
+        for 1-D plans and genuinely cross-axis N-D tilings (e.g. quadrant
+        decompositions) -- those take the numpy scatter executors.
         """
-        if len(self.shape) != 2:
+        if len(self.shape) < 2:
             return None
-        rows, cols = self.shape
         runs = [t for slabs in self.per_dst_runs for t in slabs]
-        if all(t.global_starts[1] == 0 and t.shape[1] == cols for t in runs):
-            return "rows"
-        if all(t.global_starts[0] == 0 and t.shape[0] == rows for t in runs):
-            return "cols"
+        for axis in range(len(self.shape)):
+            if all(
+                all(t.global_starts[b] == 0 and t.shape[b] == self.shape[b]
+                    for b in range(len(self.shape)) if b != axis)
+                for t in runs
+            ):
+                return _geometry_for_axis(self.shape, axis)
         return None
 
     @property
+    def pack_geometry(self) -> Optional[PackGeometry]:
+        return self._pack_geom
+
+    @property
     def pack_mode(self) -> Optional[str]:
-        return self._pack_mode
+        """``"rows"`` / ``"cols"`` tile layout of the lowered plan, or
+        ``None`` when only the numpy executors can serve it."""
+        return self._pack_geom.mode if self._pack_geom is not None else None
+
+    @property
+    def pack_axis(self) -> Optional[int]:
+        """The decomposed axis the kernel lowering gathers along."""
+        return self._pack_geom.axis if self._pack_geom is not None else None
+
+    def axis_runs(self, dst_rank: int, axis: int) -> List[Tuple[int, int]]:
+        """dst_rank's coalesced (start, count) runs along ``axis``.
+
+        Every run must span the full extent of every OTHER axis -- the
+        invariant that lets the flatten transform map it onto contiguous
+        row/column runs of the 2-D kernel view.
+        """
+        runs: List[Tuple[int, int]] = []
+        for t in self.per_dst_runs[dst_rank]:
+            for b in range(len(self.shape)):
+                if b == axis:
+                    continue
+                if t.global_starts[b] != 0 or t.shape[b] != self.shape[b]:
+                    raise ValueError(
+                        f"pack lowering along axis {axis} needs runs spanning "
+                        f"the full extent of axis {b}, got {t}")
+            runs.append((t.global_starts[axis], t.shape[axis]))
+        return runs
 
     def row_runs(self, dst_rank: int) -> List[Tuple[int, int]]:
-        """dst_rank's needed global rows as coalesced (start, count) runs.
-
-        Only valid for full-width row decompositions (2-D, every transfer
-        spanning all columns) -- the layout ``kernels.pack.pack_blocks`` DMAs.
-        """
+        """2-D compatibility shim: runs along axis 0 (full-width row slabs)."""
         if len(self.shape) != 2:
             raise ValueError(f"row_runs needs a 2-D plan, got shape {self.shape}")
-        cols = self.shape[1]
-        runs: List[Tuple[int, int]] = []
-        for t in self.per_dst_runs[dst_rank]:
-            if t.global_starts[1] != 0 or t.shape[1] != cols:
-                raise ValueError(
-                    f"pack lowering needs full-width row slabs, got {t}")
-            runs.append((t.global_starts[0], t.shape[0]))
-        return runs
+        return self.axis_runs(dst_rank, 0)
 
     def col_runs(self, dst_rank: int) -> List[Tuple[int, int]]:
-        """dst_rank's needed global columns as coalesced (start, count) runs.
-
-        The column twin of ``row_runs``: only valid for full-height column
-        decompositions (2-D, every transfer spanning all rows) -- the layout
-        ``kernels.pack.pack_cols`` DMAs for axis-1 reshards.
-        """
+        """2-D compatibility shim: runs along axis 1 (full-height col slabs)."""
         if len(self.shape) != 2:
             raise ValueError(f"col_runs needs a 2-D plan, got shape {self.shape}")
-        rows = self.shape[0]
-        runs: List[Tuple[int, int]] = []
-        for t in self.per_dst_runs[dst_rank]:
-            if t.global_starts[0] != 0 or t.shape[0] != rows:
-                raise ValueError(
-                    f"pack col lowering needs full-height column slabs, got {t}")
-            runs.append((t.global_starts[1], t.shape[1]))
-        return runs
+        return self.axis_runs(dst_rank, 1)
 
     def pack_tiles(
-        self, dst_rank: int, tile_rows: int = 8, mode: str = "rows"
+        self, dst_rank: int, tile_rows: int = 8, mode: str = "rows",
+        slab_start: int = 0, slab_extent: Optional[int] = None,
     ) -> Tuple[np.ndarray, Tuple[Tuple[int, int], ...]]:
         """Lower dst_rank's runs to pack-kernel tile offsets (cached).
 
         Returns ``(tile_offsets, segments)``: the int32 source tile index per
         output tile (the kernel's scalar-prefetch operand) and, per run,
         ``(offset_in_packed_output, count)`` to trim the tile padding back to
-        the exact rows (``mode="rows"``) or columns (``mode="cols"``).
+        the exact rows (``mode="rows"``) or columns (``mode="cols"``).  All
+        quantities are in *decomposed-axis units* -- the executor scales by
+        ``PackGeometry.scale`` when the plan is a flattened N-D one.
+
+        ``slab_start`` / ``slab_extent`` shift the runs into slab-local
+        source coordinates: a consumer holding only its received slab (whose
+        origin along the decomposed axis is ``slab_start`` and whose length
+        is ``slab_extent``) gathers from a buffer where global index ``g``
+        lives at local index ``g - slab_start``; a run falling outside
+        ``[slab_start, slab_start + slab_extent)`` on EITHER side raises --
+        clamped out-of-bounds tile DMAs would silently corrupt the block.
         """
-        key = (dst_rank, tile_rows, mode)
+        geom = self._resolve_geometry(mode)
+        key = (dst_rank, tile_rows, mode, slab_start, slab_extent)
         with self._pack_lock:
             hit = self._pack_cache.get(key)
         if hit is not None:
             return hit
-        runs = self.row_runs(dst_rank) if mode == "rows" else self.col_runs(dst_rank)
+        runs = self.axis_runs(dst_rank, geom.axis)
         tiles: List[int] = []
         segs: List[Tuple[int, int]] = []
         for start, cnt in runs:
+            start -= slab_start
+            if start < 0 or (slab_extent is not None
+                             and start + cnt > slab_extent):
+                raise ValueError(
+                    f"dst rank {dst_rank} needs axis-{geom.axis} run "
+                    f"[{start + slab_start}, {start + slab_start + cnt}) but "
+                    f"the slab covers [{slab_start}, "
+                    f"{slab_start + (slab_extent if slab_extent is not None else 0)}"
+                    f"); the slab does not cover this rank")
             t0 = start // tile_rows
             t1 = -(-(start + cnt) // tile_rows)
             segs.append((len(tiles) * tile_rows + (start - t0 * tile_rows), cnt))
@@ -367,6 +459,19 @@ class CompiledPlan:
         with self._pack_lock:
             self._pack_cache[key] = result
         return result
+
+    def _resolve_geometry(self, mode: str) -> PackGeometry:
+        """Geometry for an explicit ``mode`` request.  2-D plans honor a
+        forced mode (either axis may be lowerable); N-D plans must match
+        their detected geometry -- there is no alternative flattening."""
+        if len(self.shape) == 2:
+            return _geometry_for_axis(self.shape, 0 if mode == "rows" else 1)
+        geom = self._pack_geom
+        if geom is None or geom.mode != mode:
+            raise ValueError(
+                f"plan over shape {self.shape} has no {mode!r} lowering "
+                f"(pack_mode={self.pack_mode!r})")
+        return geom
 
 
 def _pad_to_tiles(src, tile: int, axis: int):
@@ -382,63 +487,137 @@ def _pad_to_tiles(src, tile: int, axis: int):
     return jnp.pad(src, widths)
 
 
-def _resolve_pack_mode(plan: CompiledPlan, mode: Optional[str]) -> str:
+def _resolve_pack_geom(plan: CompiledPlan, mode: Optional[str]) -> PackGeometry:
     if mode is None:
-        mode = plan.pack_mode
+        geom = plan.pack_geometry
+        if geom is None:
+            raise ValueError(
+                f"plan is not pack-kernel lowerable (shape {plan.shape}, "
+                f"pack_mode={plan.pack_mode!r}); use the numpy scatter executors")
+        return geom
     if mode not in ("rows", "cols"):
         raise ValueError(
             f"plan is not pack-kernel lowerable (shape {plan.shape}, "
             f"pack_mode={plan.pack_mode!r}); use the numpy scatter executors")
-    return mode
+    return plan._resolve_geometry(mode)
 
 
-def execute_pack_jax(plan: CompiledPlan, dst_rank: int, src,
-                     tile_rows: int = 8, mode: Optional[str] = None):
-    """Device-resident reshard: gather dst_rank's slab with the Pallas pack
-    kernel (``kernels.pack`` scalar-prefetch DMA tiles).
+def _flatten_and_pad(plan: CompiledPlan, src, geom: PackGeometry,
+                     tile_rows: int, slab_box: Optional[Box]):
+    """Flatten the (slab or global) device buffer onto the 2-D kernel frame
+    and pad the decomposed axis up to tile granularity (one copy, reused for
+    every dst rank's gather).  Returns ``(src2d, slab_start, slab_extent)``
+    -- the slab's origin and length along the decomposed axis (the global
+    extent when ``slab_box`` is None).
 
-    ``src`` is the (R, C) device buffer holding the global index space.
-    ``mode`` picks the tile layout -- ``"rows"`` (``pack_blocks``, axis-0
-    decompositions) or ``"cols"`` (``pack_cols``, axis-1); ``None`` takes the
-    plan's detected ``pack_mode``.  ``tile_rows`` is the tile extent along
-    the decomposed axis.  The tile offsets come from the cached plan lowering
-    (``plan.pack_tiles``); ragged run boundaries are padded to tile
-    granularity and trimmed back here.  Gathering several dst ranks from one
-    ragged buffer?  Use ``execute_pack_jax_all`` so the pad copy happens
-    once, not per rank.  Runs in interpret mode on CPU, Mosaic on TPU.
+    ``slab_box`` declares that ``src`` holds only the slab
+    ``(starts, shape)`` of the global index space; the slab must span the
+    full extent of every non-decomposed axis (the shape a 1-D decomposition
+    slot always has), and gathers then run in slab-local coordinates.
     """
+    expect = tuple(plan.shape) if slab_box is None else tuple(slab_box[1])
+    slab_start = 0
+    slab_extent = plan.shape[geom.axis]
+    if slab_box is not None:
+        if not geom.covers_slab(slab_box, plan.shape):
+            raise ValueError(
+                f"slab {slab_box} does not span the full extent of every "
+                f"non-decomposed axis of shape {plan.shape}; the kernel "
+                f"lowering gathers along axis {geom.axis} only")
+        slab_start = int(slab_box[0][geom.axis])
+        slab_extent = int(slab_box[1][geom.axis])
+    if len(src.shape) != len(expect) or any(
+        s != e for a, (s, e) in enumerate(zip(src.shape, expect))
+        if a != geom.axis
+    ) or src.shape[geom.axis] < expect[geom.axis]:
+        raise ValueError(
+            f"pack source has shape {tuple(src.shape)}, expected "
+            f"{expect} (axis {geom.axis} may be pre-padded)")
+    # flatten: row-major bytes are already in kernel order (see PackGeometry)
+    n_axis = int(src.shape[geom.axis])
+    if geom.mode == "rows":
+        src2d = src.reshape(n_axis, geom.cols)
+        return _pad_to_tiles(src2d, tile_rows, 0), slab_start, slab_extent
+    src2d = src.reshape(geom.rows, n_axis * geom.scale)
+    return (_pad_to_tiles(src2d, tile_rows * geom.scale, 1),
+            slab_start, slab_extent)
+
+
+def _pack_gather(plan: CompiledPlan, dst_rank: int, src2d,
+                 tile_rows: int, geom: PackGeometry, slab_start: int,
+                 slab_extent: Optional[int] = None):
+    """Gather one dst rank's block from the flattened+padded 2-D buffer and
+    unflatten it back to the N-D destination block shape."""
     import jax.numpy as jnp
 
     from repro.kernels import ops
 
-    mode = _resolve_pack_mode(plan, mode)
-    axis = 0 if mode == "rows" else 1
-    tiles, segs = plan.pack_tiles(dst_rank, tile_rows, mode=mode)
+    dshape = plan.dst[dst_rank][1]
+    tiles, segs = plan.pack_tiles(dst_rank, tile_rows, mode=geom.mode,
+                                  slab_start=slab_start,
+                                  slab_extent=slab_extent)
     if tiles.size == 0:
-        empty = (0, plan.shape[1]) if axis == 0 else (plan.shape[0], 0)
-        return jnp.zeros(empty, dtype=src.dtype)
-    padded = _pad_to_tiles(src, tile_rows, axis)
-    if mode == "rows":
-        packed = ops.pack_blocks(padded, jnp.asarray(tiles), tile_rows=tile_rows)
+        return jnp.zeros(dshape, dtype=src2d.dtype)
+    if geom.mode == "rows":
+        packed = ops.pack_blocks(src2d, jnp.asarray(tiles), tile_rows=tile_rows)
         parts = [packed[a : a + c] for a, c in segs]
+        out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
     else:
-        packed = ops.pack_cols(padded, jnp.asarray(tiles), tile_cols=tile_rows)
-        parts = [packed[:, a : a + c] for a, c in segs]
-    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=axis)
+        k = geom.scale
+        packed = ops.pack_cols(src2d, jnp.asarray(tiles),
+                               tile_cols=tile_rows * k)
+        parts = [packed[:, a * k : (a + c) * k] for a, c in segs]
+        out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    return out.reshape(dshape)
+
+
+def execute_pack_jax(plan: CompiledPlan, dst_rank: int, src,
+                     tile_rows: int = 8, mode: Optional[str] = None,
+                     slab_box: Optional[Box] = None):
+    """Device-resident reshard: gather dst_rank's block with the Pallas pack
+    kernels (``kernels.pack`` scalar-prefetch DMA tiles).
+
+    ``src`` is the device buffer holding the global index space -- or, with
+    ``slab_box=(starts, shape)``, only that slab of it (a received payload);
+    gathers then run in slab-local source coordinates and every requested
+    dst block must lie inside the slab.  Rank>2 buffers are flattened onto
+    the 2-D kernel frame per the plan's ``PackGeometry`` and the gathered
+    block is reshaped back -- the kernels themselves stay 2-D.
+
+    ``mode`` picks the tile layout -- ``"rows"`` (``pack_blocks``, axis-0
+    decompositions) or ``"cols"`` (``pack_cols``, any other axis); ``None``
+    takes the plan's detected ``pack_mode``.  ``tile_rows`` is the tile
+    extent in decomposed-axis units.  Tile offsets come from the cached plan
+    lowering (``plan.pack_tiles``); ragged run boundaries are padded to tile
+    granularity and trimmed back here.  Gathering several dst ranks from one
+    buffer?  Use ``execute_pack_jax_all`` so the flatten/pad copy happens
+    once, not per rank.  Runs in interpret mode on CPU, Mosaic on TPU.
+    """
+    geom = _resolve_pack_geom(plan, mode)
+    src2d, slab_start, slab_extent = _flatten_and_pad(
+        plan, src, geom, tile_rows, slab_box)
+    return _pack_gather(plan, dst_rank, src2d, tile_rows, geom, slab_start,
+                        slab_extent)
 
 
 def execute_pack_jax_all(plan: CompiledPlan, src, tile_rows: int = 8,
-                         mode: Optional[str] = None):
-    """Gather EVERY dst rank's block from one (R, C) device buffer.
+                         mode: Optional[str] = None,
+                         slab_box: Optional[Box] = None,
+                         ranks: Optional[Sequence[int]] = None):
+    """Gather dst-rank blocks (all of them, or just ``ranks``) from ONE
+    device buffer -- the global extent, or a received slab (``slab_box``).
 
-    Pads the ragged tail once for the whole exchange instead of once per
-    kernel call, then reuses the padded buffer for each rank's tile gather.
-    Returns the per-dst-rank list of slab blocks.
+    Flattens and pads once for the whole exchange instead of once per
+    kernel call, then reuses the 2-D buffer for each rank's tile gather.
+    Returns the block list aligned to ``ranks`` (default: every dst rank).
     """
-    mode = _resolve_pack_mode(plan, mode)
-    src = _pad_to_tiles(src, tile_rows, 0 if mode == "rows" else 1)
-    return [execute_pack_jax(plan, r, src, tile_rows=tile_rows, mode=mode)
-            for r in range(len(plan.dst))]
+    geom = _resolve_pack_geom(plan, mode)
+    src2d, slab_start, slab_extent = _flatten_and_pad(
+        plan, src, geom, tile_rows, slab_box)
+    wanted = range(len(plan.dst)) if ranks is None else ranks
+    return [_pack_gather(plan, r, src2d, tile_rows, geom, slab_start,
+                         slab_extent)
+            for r in wanted]
 
 
 class PlanCache:

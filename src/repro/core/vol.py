@@ -244,7 +244,12 @@ class VOL:
                     if r is NO_DATA:
                         any_live = True
                     elif r is not None:
-                        c.stats.consumer_wait_s += time.monotonic() - t0
+                        # under the channel lock: every other writer of
+                        # consumer_wait_s holds it, and += on a float is
+                        # read-modify-write -- a concurrent get() on a
+                        # sibling consumer could otherwise lose the update
+                        with c._lock:
+                            c.stats.consumer_wait_s += time.monotonic() - t0
                         self._fire("after_file_open", r)
                         return r
                 if not any_live:

@@ -88,6 +88,7 @@ def test_match_path_reflexive(parts):
 # ---------------------------------------------------------------------------
 # CoW share-count thread safety
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_share_race_view_vs_cow_write():
     """Racing ``view()`` against a CoW write must never tear the
     (share, buffer) pair: a view taken mid-materialization could otherwise

@@ -13,6 +13,7 @@ from repro.models.registry import get_family
 KEY = jax.random.PRNGKey(7)
 
 
+@pytest.mark.slow
 def test_hybrid_ring_cache_past_window():
     """Decoding far past cfg.window must match the windowed full forward --
     the ring buffer overwrites old slots, the full forward masks them."""

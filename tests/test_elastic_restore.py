@@ -10,6 +10,8 @@ one more step, and match the uninterrupted run's loss exactly.
 
 import os
 import subprocess
+
+import pytest
 import sys
 import textwrap
 
@@ -75,6 +77,7 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_checkpoint_restores_across_mesh_shapes():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

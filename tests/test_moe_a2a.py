@@ -80,6 +80,7 @@ MULTIDEV = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_a2a_matches_oracle_on_8_virtual_devices():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

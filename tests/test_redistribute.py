@@ -635,6 +635,7 @@ def test_prefetch_default_and_yaml_knob():
     assert not plain.prefetch                        # no spec => off
 
 
+@pytest.mark.slow
 def test_prefetch_channel_serves_futures_byte_exact():
     """Payloads prepared on the executor arrive bit-exact, with bytes_moved
     and hit/miss accounting landing by delivery time."""
@@ -698,6 +699,7 @@ def test_prefetch_disabled_records_nothing():
     assert rep.total_bytes_moved > 0     # sync path still accounts in offer
 
 
+@pytest.mark.slow
 def test_prefetch_through_file_transport(tmp_path):
     """Spill writes also ride the executor; payloads still load correctly."""
     n = 128

@@ -36,6 +36,7 @@ def test_loss_decreases():
     assert all(np.isfinite(l) for l in losses)
 
 
+@pytest.mark.slow
 def test_accum_equivalent_to_full_batch():
     """accum_steps=2 must match the full-batch gradient step closely."""
     s0 = init_state(KEY, CFG, OCFG)
@@ -49,6 +50,7 @@ def test_accum_equivalent_to_full_batch():
                                    atol=5e-4, rtol=5e-3)
 
 
+@pytest.mark.slow
 def test_compressed_grads_close_to_exact():
     """int8 error-feedback compression stays near the exact update."""
     s0 = init_state(KEY, CFG, OCFG)
