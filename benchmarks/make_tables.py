@@ -1,5 +1,6 @@
 """Generate the EXPERIMENTS.md §Dry-run/§Roofline markdown tables from
-results/dryrun/*.json.  Run after the dry-run grid:
+results/dryrun/*.json, plus the runtime-scheduler counter table from
+BENCH_scheduler.json when present.  Run after the dry-run grid:
 
     PYTHONPATH=src python -m benchmarks.make_tables > results/roofline_tables.md
 """
@@ -12,6 +13,7 @@ import os
 from collections import defaultdict
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
 def load_all():
@@ -65,12 +67,54 @@ def variants_table(rows):
                   f"| {r['memory']['peak_bytes'] / 2**30:.2f} |")
 
 
+def scheduler_table():
+    """Render BENCH_scheduler.json (the disparate-rate scheduler bench):
+    per-run consumer blocked seconds, hit/miss counters, retune decisions,
+    and the final autotuned depths."""
+    # same default as common.write_json (BENCH_DIR, else cwd), with the
+    # repo root as a fallback for runs launched from elsewhere
+    candidates = [os.path.join(os.environ.get("BENCH_DIR", "."),
+                               "BENCH_scheduler.json"),
+                  os.path.join(REPO_ROOT, "BENCH_scheduler.json")]
+    path = next((p for p in candidates if os.path.exists(p)), None)
+    if path is None:
+        return
+    with open(path) as f:
+        doc = json.load(f)
+    print("\n## Runtime scheduler (disparate-rate bench)\n")
+    print("| run | policy | hot blocked s | hot hits | hot misses "
+          "| retunes | telemetry samples | wall s |")
+    print("|---|---|---:|---:|---:|---:|---:|---:|")
+    for tag in ("static", "adaptive"):
+        r = doc.get(tag)
+        if not r:
+            continue
+        print(f"| {tag} | {r['scheduler'].get('policy', '?')} "
+              f"| {r['hot_blocked_s']:.3f} | {r['hot_hits']} "
+              f"| {r['hot_misses']} | {r['retunes']} "
+              f"| {r['telemetry_samples']} | {r['wall_s']:.2f} |")
+    depths = doc.get("adaptive", {}).get("final_depths", {})
+    if depths:
+        print("\n| edge | final depth |")
+        print("|---|---:|")
+        for edge, depth in sorted(depths.items()):
+            print(f"| {edge} | {depth} |")
+    decisions = doc.get("adaptive", {}).get("scheduler", {}).get("decisions", [])
+    if decisions:
+        print("\n| retune | edge | depth | reason |")
+        print("|---|---|---|---|")
+        for i, d in enumerate(decisions):
+            print(f"| {i} | {d['edge']} | {d['old']} -> {d['new']} "
+                  f"| {d['reason']} |")
+
+
 def main():
     rows = load_all()
     print("## Baseline roofline grid\n")
     baseline_table(rows)
     print("\n## Variant (hillclimb) cells\n")
     variants_table(rows)
+    scheduler_table()
 
 
 if __name__ == "__main__":

@@ -13,10 +13,12 @@
   roofline     -> §Roofline table from the dry-run grid (not a paper artifact)
 
 ``--smoke`` is the tier-1 entry point: it runs the pytest suite, a small
-transport bench, and a small redistribution bench, and fails if any fails
-(gates: fan-out copy reduction >= 2x, M->N bytes-shipped reduction >= 2x,
-plan-cache hit rate >= 0.9, zero aligned-path copies, prefetch overlap
->= 0.30, and a byte-exact 3-D reshard on the flattened pack-kernel path).
+transport bench, a small redistribution bench, and the scheduler bench, and
+fails if any fails (gates: fan-out copy reduction >= 2x, M->N bytes-shipped
+reduction >= 2x, plan-cache hit rate >= 0.9, zero aligned-path copies,
+prefetch overlap >= 0.30, a byte-exact 3-D reshard on the flattened
+pack-kernel path, the autotuned disparate-rate run's consumer blocked_s at
+or below the static-depth baseline, and a telemetry JSON round trip).
 ``WILKINS_SMOKE_SKIP_PYTEST=1`` skips the pytest stage (CI runs the suite
 as its own fast/slow job steps).
 
@@ -86,13 +88,24 @@ def _smoke() -> int:
           f"prefetch_overlap={overlap:.2f} "
           f"pack3d_mode={nd['pack_mode']} pack3d_exact={nd['byte_exact']} "
           f"====", flush=True)
+    print("==== smoke: bench_scheduler ====", flush=True)
+    from . import bench_flowcontrol
+    sr = bench_flowcontrol.bench_scheduler(smoke=True)
+    print(f"==== smoke: scheduler "
+          f"static_blocked={sr['static']['hot_blocked_s']:.3f}s "
+          f"autotuned_blocked={sr['adaptive']['hot_blocked_s']:.3f}s "
+          f"telemetry_roundtrip={sr['telemetry_roundtrip_ok']} "
+          f"====", flush=True)
     # gates: M->N shipped-bytes reduction, steady-state plan reuse, aligned
     # zero-copy, the reshard+prefetch pipeline hiding >= 30% of slab-serve
-    # time behind consumer compute on the 4->2 edge, and the 3-D reshard
-    # staying on the flattened kernel path byte-exactly (no numpy fallback)
+    # time behind consumer compute on the 4->2 edge, the 3-D reshard
+    # staying on the flattened kernel path byte-exactly (no numpy fallback),
+    # the autotuned disparate-rate run blocking its consumer no longer than
+    # the static-depth baseline, and the telemetry JSON round-tripping
     ok = (shipped >= 2.0 and hit_rate >= 0.9 and aligned_copied == 0
           and overlap >= 0.30
-          and nd["pack_mode"] is not None and nd["byte_exact"])
+          and nd["pack_mode"] is not None and nd["byte_exact"]
+          and sr["blocked_improved"] and sr["telemetry_roundtrip_ok"])
     return 0 if ok else 1
 
 

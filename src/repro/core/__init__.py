@@ -9,9 +9,12 @@ Layers (paper Fig. 1):
   data model / VOL  -> datamodel, vol, h5        (HDF5 data model + interception)
 """
 
-from . import datamodel, h5, redistribute
+from . import datamodel, h5, redistribute, scheduler
 from .channel import (Channel, ChannelMux, ChannelStats, ChannelTimeout,
-                      FlowControl, NO_DATA)
+                      FlowControl, NO_DATA, PrefetchPool)
+from .scheduler import (DepthAutotuner, FairPolicy, FifoPolicy,
+                        ResizableSemaphore, SchedulerConfig, SchedulerRuntime,
+                        TelemetryTimeline)
 from .comm import TaskComm, world
 from .datamodel import BlockOwnership, Dataset, File, Group
 from .driver import TaskFailure, Wilkins, WorkflowReport
@@ -24,6 +27,15 @@ __all__ = [
     "datamodel",
     "h5",
     "redistribute",
+    "scheduler",
+    "PrefetchPool",
+    "DepthAutotuner",
+    "FairPolicy",
+    "FifoPolicy",
+    "ResizableSemaphore",
+    "SchedulerConfig",
+    "SchedulerRuntime",
+    "TelemetryTimeline",
     "Channel",
     "ChannelMux",
     "ChannelStats",

@@ -50,6 +50,7 @@ import numpy as np
 from .datamodel import (BlockOwnership, File, compile_file_pattern,
                         compile_path_pattern, transport_stats)
 from .redistribute import RedistSpec, plan_cache
+from .scheduler import FifoPolicy, QueuePolicy, ResizableSemaphore
 
 __all__ = [
     "FlowControl",
@@ -127,16 +128,24 @@ class PrefetchPool:
 
     * runs DAEMON workers, so a wedged prep can never hang interpreter exit;
     * supports ``shutdown()``: queued-but-unstarted preps are *cancelled*
-      (their futures resolve to CancelledError) and workers drain and stop;
+      (their futures resolve to CancelledError, which still fires their
+      done-callbacks, so per-edge depth slots are released -- the slot-leak
+      regression) and workers drain and stop;
+    * arbitrates pending preps through a pluggable ``QueuePolicy``
+      (``scheduler.FifoPolicy`` -- the default, bit-for-bit the old single
+      deque -- or ``scheduler.FairPolicy``, deficit-weighted round-robin by
+      per-edge YAML ``weight:``);
     * is created per ``Wilkins.run`` (sized to the run's total prefetch
-      depth) and shut down on both the success and error paths --
-      standalone ``Channel`` use falls back to a lazy module-level default.
+      depth, policy from the YAML ``scheduler:`` block) and shut down on
+      both the success and error paths -- standalone ``Channel`` use falls
+      back to a lazy module-level default.
     """
 
     def __init__(self, max_workers: int = 2,
-                 thread_name_prefix: str = "wilkins-prefetch"):
+                 thread_name_prefix: str = "wilkins-prefetch",
+                 policy: Optional[QueuePolicy] = None):
         self._cv = threading.Condition()
-        self._work: Deque[Tuple[Future, Callable, tuple]] = deque()
+        self._policy: QueuePolicy = policy if policy is not None else FifoPolicy()
         self._shutdown = False
         self._threads = [
             threading.Thread(target=self._worker,
@@ -146,23 +155,29 @@ class PrefetchPool:
         for t in self._threads:
             t.start()
 
-    def submit(self, fn: Callable, *args) -> Future:
+    def submit(self, fn: Callable, *args, edge: Optional[str] = None,
+               weight: int = 1) -> Future:
+        """Enqueue a prep; ``edge``/``weight`` feed the queue policy (the
+        FIFO policy ignores them, so plain ``submit(fn)`` is unchanged)."""
         fut: Future = Future()
         with self._cv:
             if self._shutdown:
                 raise RuntimeError("prefetch pool is shut down")
-            self._work.append((fut, fn, args))
+            self._policy.push((fut, fn, args), edge=edge, weight=weight)
             self._cv.notify()
         return fut
 
     def _worker(self) -> None:
         while True:
             with self._cv:
-                while not self._work and not self._shutdown:
+                while not self._policy.pending() and not self._shutdown:
                     self._cv.wait()
-                if not self._work:
+                if not self._policy.pending():
                     return  # shutdown and drained
-                fut, fn, args = self._work.popleft()
+                item = self._policy.pop()
+            if item is None:  # policy raced empty (defensive)
+                continue
+            fut, fn, args = item
             if not fut.set_running_or_notify_cancel():
                 continue  # cancelled while queued
             try:
@@ -174,12 +189,12 @@ class PrefetchPool:
         """Stop accepting work; cancel queued preps; wake and drain workers.
 
         Running preps are left to finish on their (daemon) worker -- there is
-        no way to interrupt them, but they can no longer block exit."""
+        no way to interrupt them, but they can no longer block exit.
+        ``Future.cancel`` fires done-callbacks, so every cancelled prep still
+        releases its edge's depth slot (no leak, no over-release)."""
         with self._cv:
             self._shutdown = True
-            pending = list(self._work) if cancel_pending else []
-            if cancel_pending:
-                self._work.clear()
+            pending = self._policy.drain() if cancel_pending else []
             self._cv.notify_all()
         for fut, _, _ in pending:
             fut.cancel()
@@ -233,6 +248,15 @@ class ChannelStats:
     bytes_moved: int = 0
     producer_wait_s: float = 0.0
     consumer_wait_s: float = 0.0
+    # Per-EDGE prefetch accounting (the process-wide TransportStats keeps the
+    # aggregate): the depth autotuner and the telemetry timeline both need to
+    # attribute hits/misses/blocked seconds to the edge that earned them.
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
+    prefetch_cancelled: int = 0
+    prefetch_prepared_s: float = 0.0
+    prefetch_blocked_s: float = 0.0
+    inflight_preps: int = 0  # gauge: preps submitted but not yet done
     # (t, who, what) ring: oldest events roll off past the maxlen, counted
     # in ``events_dropped`` so Gantt consumers know the timeline is truncated
     events: Deque[Tuple[float, str, str]] = field(
@@ -290,6 +314,8 @@ class Channel:
         redistribute: Optional[RedistSpec] = None,
         prefetch: Optional[Union[bool, int]] = None,
         events_maxlen: int = EVENTS_MAXLEN,
+        weight: int = 1,
+        autotune: Optional[Tuple[int, int]] = None,
     ):
         self.name = name
         self.producer = producer
@@ -322,8 +348,28 @@ class Channel:
             depth = int(prefetch)
         if depth < 0:
             raise ValueError(f"prefetch depth must be >= 0, got {depth}")
+        # Scheduling knobs (see scheduler.py): ``weight`` feeds the fair
+        # (DWRR) queue policy; ``autotune=(min, max)`` bounds the depth
+        # autotuner and implies prefetch -- the initial depth is clamped
+        # into the bounds, so an autotuned edge always starts async.
+        if weight < 1:
+            raise ValueError(f"scheduler weight must be >= 1, got {weight}")
+        self.weight = int(weight)
+        if autotune is not None:
+            amin, amax = int(autotune[0]), int(autotune[1])
+            if amin < 1:
+                raise ValueError(
+                    f"autotune min depth must be >= 1, got {amin} "
+                    f"(use prefetch: 0 to disable prefetch instead)")
+            if amax < amin:
+                raise ValueError(
+                    f"autotune bounds must satisfy min <= max, got "
+                    f"[{amin}, {amax}]")
+            autotune = (amin, amax)
+            depth = min(max(depth, amin), amax)
+        self.autotune = autotune
         self.prefetch = depth
-        self._prefetch_sem = threading.BoundedSemaphore(depth) if depth else None
+        self._prefetch_sem = ResizableSemaphore(depth) if depth else None
         # run-scoped pool injected by the driver (None = module default)
         self._prefetch_pool: Optional[PrefetchPool] = None
 
@@ -360,6 +406,48 @@ class Channel:
         """Attach the run-scoped prefetch pool (driver-owned); ``None``
         detaches and falls back to the lazy module default."""
         self._prefetch_pool = pool
+
+    def set_depth(self, depth: int) -> None:
+        """Retune the per-edge prefetch depth at runtime (autotuner hook).
+
+        The new depth is applied under the channel lock, then the in-flight
+        semaphore is resized: growing wakes producers blocked in ``offer``;
+        shrinking lets the excess in-flight preps drain without interrupting
+        any of them.  Only valid on a channel built with prefetch enabled
+        (``self._prefetch_sem`` exists); depth must stay >= 1 so a producer
+        already committed to the async path can never block forever on a
+        zero-limit semaphore.
+        """
+        depth = int(depth)
+        if depth < 1:
+            raise ValueError(f"runtime prefetch depth must be >= 1, got {depth}")
+        if self._prefetch_sem is None:
+            raise ValueError(
+                f"channel {self.name} was built without prefetch; "
+                f"set prefetch >= 1 (or autotune:) in the workflow YAML")
+        with self._lock:
+            self.prefetch = depth
+            self._prefetch_sem.resize(depth)
+
+    @property
+    def max_prefetch_depth(self) -> int:
+        """Upper bound on this edge's depth: the autotune max if autotuned,
+        else the static depth (used to size the run's prefetch pool)."""
+        return self.autotune[1] if self.autotune is not None else self.prefetch
+
+    def _on_prep_done(self, fut: Future) -> None:
+        """Done-callback for every submitted prep: completion, error, and
+        shutdown-cancel alike release the edge's depth slot and close the
+        in-flight gauge; a cancelled prep (pool shutdown, or a `latest`
+        edge dropping a stale step) also counts as ``prefetch_cancelled``."""
+        self._prefetch_sem.release()
+        cancelled = fut.cancelled()
+        with self._lock:
+            self.stats.inflight_preps -= 1
+            if cancelled:
+                self.stats.prefetch_cancelled += 1
+        if cancelled:
+            transport_stats().record_prefetch_cancelled()
 
     def add_listener(self, mux: ChannelMux) -> None:
         with self._lock:
@@ -518,26 +606,38 @@ class Channel:
                 self.stats.dropped += 1
                 self._event("producer", "skip_latest")
                 return False
+            # depth is read under the lock: the autotuner retunes it at
+            # runtime via set_depth, also under this lock
+            depth = self.prefetch
 
-        if self.prefetch:
+        if depth:
             # per-edge depth: block until one of this channel's in-flight
             # preps completes (backpressure), never starving other edges
             # of pool workers
             self._prefetch_sem.acquire()
             try:
                 pool = self._prefetch_pool or _prefetch_pool()
-                fut = pool.submit(self._prepare_timed, f, _payload_cache)
+                fut = pool.submit(self._prepare_timed, f, _payload_cache,
+                                  edge=self.name, weight=self.weight)
             except BaseException:
                 self._prefetch_sem.release()
                 raise
-            # release on completion, error, or shutdown-cancel alike
-            fut.add_done_callback(lambda _fut: self._prefetch_sem.release())
+            with self._lock:
+                self.stats.inflight_preps += 1
+            # release the slot + close the gauge on completion, error, or
+            # cancel alike (shutdown AND the `latest` stale-prep drop)
+            fut.add_done_callback(self._on_prep_done)
             payload: Tuple[str, Any] = ("future", fut)
             payload_bytes = None
         else:
             payload, payload_bytes = self._prepare(f, _payload_cache)
         t0 = time.monotonic()
         with self._lock:
+            if self.strategy == FlowControl.LATEST and depth:
+                # a newer step supersedes any queued payload future whose
+                # prep has not finished: cancel it rather than prepare
+                # bytes nobody will read (`latest` semantics)
+                self._drop_stale_preps_locked()
             self._event("producer", "wait_begin")
             while len(self._queue) >= self.queue_depth and not self._done:
                 self._lock.wait()
@@ -554,6 +654,35 @@ class Channel:
         self._notify_listeners()
         return True
 
+    def _drop_stale_preps_locked(self) -> int:
+        """Drop queued-but-unfinished payload futures on a `latest` edge
+        (caller holds ``self._lock``; a newer step is about to be queued).
+
+        A prep that has not started is cancelled -- its done-callback
+        releases the depth slot and counts ``prefetch_cancelled``.  A prep
+        already running cannot be stopped, but it leaves the queue here so
+        its bytes are never delivered; it is counted as cancelled directly
+        (its done-callback will see a *completed* future and only close the
+        gauge).  Finished futures stay queued: their bytes exist, and they
+        are still the freshest data until the new step lands.
+        """
+        kept: Deque[Tuple[str, Any]] = deque()
+        dropped = 0
+        for kind, payload in self._queue:
+            if kind == "future" and not payload.done():
+                dropped += 1
+                self.stats.dropped += 1
+                self._event("producer", "drop_stale_prep")
+                if not payload.cancel():
+                    self.stats.prefetch_cancelled += 1
+                    transport_stats().record_prefetch_cancelled()
+            else:
+                kept.append((kind, payload))
+        self._queue = kept
+        if dropped:
+            self._lock.notify_all()  # a freed ring slot unblocks rendezvous
+        return dropped
+
     def _prepare_timed(
         self, f: File, cache: Optional[Dict[Any, File]] = None
     ) -> Tuple[Tuple[str, Any], int]:
@@ -561,7 +690,10 @@ class Channel:
         accounting (prepared vs consumer-blocked seconds)."""
         t0 = time.monotonic()
         item, payload_bytes = self._prepare(f, cache)
-        transport_stats().record_prefetch_prepare(time.monotonic() - t0)
+        dt = time.monotonic() - t0
+        transport_stats().record_prefetch_prepare(dt)
+        with self._lock:
+            self.stats.prefetch_prepared_s += dt
         return item, payload_bytes
 
     def _prepare(
@@ -666,10 +798,15 @@ class Channel:
                     self._lock.notify_all()
                 self._notify_listeners()
                 raise
-            transport_stats().record_prefetch(
-                hit, blocked_s=0.0 if hit else time.monotonic() - t0)
+            blocked = 0.0 if hit else time.monotonic() - t0
+            transport_stats().record_prefetch(hit, blocked_s=blocked)
             with self._lock:
                 self.stats.bytes_moved += payload_bytes
+                if hit:
+                    self.stats.prefetch_hits += 1
+                else:
+                    self.stats.prefetch_misses += 1
+                    self.stats.prefetch_blocked_s += blocked
             return self._deliver(inner)
         self._event("consumer", "recv")
         if kind == "file":

@@ -51,6 +51,10 @@ class TaskComm:
     # filename_pattern -> RedistSpec, wired by the driver from the task's
     # redistributing ports (consumer inports win over outports it feeds)
     redist_specs: Dict[str, Any] = field(default_factory=dict)
+    # per-run SchedulerRuntime (driver-wired): lets task code mark explicit
+    # step boundaries for the depth autotuner via ``comm.step()`` -- useful
+    # for compute loops that do no file I/O between timesteps
+    scheduler: Any = None
 
     def is_io_proc(self, rank: Optional[int] = None) -> bool:
         r = self.rank if rank is None else rank
@@ -88,6 +92,16 @@ class TaskComm:
 
     def barrier(self) -> None:  # single-process runtime: no-op
         pass
+
+    def step(self) -> None:
+        """Mark an explicit step boundary for the runtime scheduler.
+
+        File closes (producers) and intercepted opens (consumers) already
+        count as step events; a task whose timestep loop does neither can
+        call this so the depth autotuner / telemetry sampler still tick at
+        its cadence.  No-op standalone (no workflow scheduler wired)."""
+        if self.scheduler is not None:
+            self.scheduler.notify_step("comm_step")
 
     # ------------------------------------------------------------- reshard
     def resolve_redist_spec(self, spec: Any = None, port: Optional[str] = None):

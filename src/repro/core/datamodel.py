@@ -130,6 +130,10 @@ class TransportStats:
         self.prefetch_misses = 0
         self.prefetch_prepared_s = 0.0
         self.prefetch_blocked_s = 0.0
+        # preps cancelled before delivery: pool shutdown mid-run, or a
+        # `latest` edge dropping a stale in-flight prep when a newer step
+        # superseded it (the autotuner reads this as "depth too deep")
+        self.prefetch_cancelled = 0
         # TaskComm.reshard executor dispatch: how many calls ran on the
         # Pallas pack kernels vs the numpy scatter executors (the benchmark
         # and tests assert "no numpy fallback" through these)
@@ -157,6 +161,10 @@ class TransportStats:
                 self.reshard_pack += 1
             else:
                 self.reshard_numpy += 1
+
+    def record_prefetch_cancelled(self) -> None:
+        with self._lock:
+            self.prefetch_cancelled += 1
 
     def record_prefetch(self, hit: bool, blocked_s: float = 0.0) -> None:
         with self._lock:
@@ -193,6 +201,7 @@ class TransportStats:
                 "prefetch_misses": self.prefetch_misses,
                 "prefetch_prepared_s": self.prefetch_prepared_s,
                 "prefetch_blocked_s": self.prefetch_blocked_s,
+                "prefetch_cancelled": self.prefetch_cancelled,
                 "reshard_pack": self.reshard_pack,
                 "reshard_numpy": self.reshard_numpy,
             }
@@ -204,6 +213,7 @@ class TransportStats:
             self.redist_baseline_bytes = 0
             self.redist_aligned = self.redist_slabs = 0
             self.prefetch_hits = self.prefetch_misses = 0
+            self.prefetch_cancelled = 0
             self.prefetch_prepared_s = self.prefetch_blocked_s = 0.0
             self.reshard_pack = self.reshard_numpy = 0
 

@@ -35,6 +35,7 @@ from .comm import TaskComm, pop_comm, push_comm
 from .datamodel import transport_stats
 from .graph import WorkflowGraph
 from .redistribute import RedistSpec, plan_cache
+from .scheduler import SchedulerRuntime, TelemetryTimeline
 from .vol import VOL, pop_vol, push_vol
 
 __all__ = ["Wilkins", "WorkflowReport", "TaskFailure"]
@@ -61,6 +62,11 @@ class WorkflowReport:
     # both failure paths, so ``err.report.summary()`` shows them too
     transport: Dict[str, Any] = field(default_factory=dict)
     plan_cache: Dict[str, Any] = field(default_factory=dict)
+    # runtime-scheduling snapshot (policy, step/tick counts, autotuner
+    # decisions, final per-edge depths) and the telemetry timeline ring --
+    # exportable as JSON via ``timeline.export(path)`` for offline replay
+    scheduler: Dict[str, Any] = field(default_factory=dict)
+    timeline: Optional[TelemetryTimeline] = None
 
     @property
     def total_bytes_moved(self) -> int:
@@ -92,6 +98,7 @@ class WorkflowReport:
             lines.append(
                 f"prefetch: hits={t['prefetch_hits']} "
                 f"misses={t['prefetch_misses']} "
+                f"cancelled={t.get('prefetch_cancelled', 0)} "
                 f"prepared_s={t['prefetch_prepared_s']:.3f} "
                 f"blocked_s={t['prefetch_blocked_s']:.3f}")
             lines.append(
@@ -107,6 +114,16 @@ class WorkflowReport:
                 f"plan_cache: size={pc['size']} hits={pc['hits']} "
                 f"misses={pc['misses']} evictions={pc['evictions']} "
                 f"hit_rate={pc['hit_rate']:.2f}")
+        sc = self.scheduler
+        if sc:
+            lines.append(
+                f"scheduler: policy={sc['policy']} steps={sc['steps']} "
+                f"ticks={sc['ticks']} retunes={len(sc['decisions'])} "
+                f"telemetry_samples={sc['telemetry_samples']}")
+            for d in sc["decisions"]:
+                lines.append(
+                    f"  retune {d['edge']}: depth {d['old']}->{d['new']} "
+                    f"({d['reason']})")
         for (task, inst), secs in sorted(self.task_times.items()):
             lines.append(
                 f"  {task}[{inst}]: {secs:.3f}s launches={self.task_launches.get((task, inst), 1)}"
@@ -169,6 +186,9 @@ class Wilkins:
         self.device_groups = self._partition_devices(devices)
         self.channels: List[Channel] = []
         self.vols: Dict[Tuple[str, int], VOL] = {}
+        # per-run scheduling state (set for the duration of ``run``): step
+        # events from the VOLs / TaskComms tick the autotuner + telemetry
+        self._sched_runtime: Optional[SchedulerRuntime] = None
         self._build()
 
     # ------------------------------------------------------------ resources
@@ -231,6 +251,8 @@ class Wilkins:
                     zero_copy=self.zero_copy,
                     redistribute=redist,
                     prefetch=edge.prefetch,
+                    weight=edge.weight,
+                    autotune=edge.autotune,
                 )
                 self.channels.append(ch)
 
@@ -286,6 +308,7 @@ class Wilkins:
             io_procs=t.io_procs,
             devices=self.device_groups.get((name, inst)),
             redist_specs=specs,
+            scheduler=self._sched_runtime,
         )
 
     def _run_instance(self, name: str, inst: int, report: WorkflowReport) -> None:
@@ -359,11 +382,28 @@ class Wilkins:
         # interpreter exit.  The pool is PER RUN, not the module global:
         # concurrent Wilkins runs in one process must not cancel each
         # other's in-flight preps.
-        total_depth = sum(ch.prefetch for ch in self.channels)
+        # The run's scheduler: builds the pool's queue policy from the YAML
+        # ``scheduler:`` block, counts step events from the VOLs/TaskComms,
+        # and fires the depth autotuner + telemetry sampler every
+        # ``tick_every`` events.  Pool sizing uses each edge's MAX depth
+        # (autotune upper bound), so a retune upward never starves for
+        # workers mid-run.
+        sched = SchedulerRuntime(self.graph.scheduler, self.channels)
+        self._sched_runtime = sched
+        # Per-step hooks are wired only when the workflow opted in (an
+        # explicit ``scheduler:`` block, or an autotuned edge that needs
+        # ticks to retune): a legacy workflow pays zero per-step cost --
+        # its report still carries the snapshot and one teardown sample.
+        if self.graph.scheduler.explicit or any(
+                ch.autotune is not None for ch in self.channels):
+            for vol in self.vols.values():
+                vol.scheduler = sched
+        total_depth = sum(ch.max_prefetch_depth for ch in self.channels)
         pool: Optional[PrefetchPool] = None
         if total_depth:
             pool = PrefetchPool(max_workers=max(2, min(16, total_depth)),
-                                thread_name_prefix="wilkins-prefetch-run")
+                                thread_name_prefix="wilkins-prefetch-run",
+                                policy=sched.make_policy())
             for ch in self.channels:
                 ch.set_prefetch_pool(pool)
         t0 = time.monotonic()
@@ -388,8 +428,11 @@ class Wilkins:
                 if th.is_alive():
                     hung.append(th.name)
             report.wall_time_s = time.monotonic() - t0
+            sched.close()  # final telemetry sample before the snapshot
             report.transport = transport_stats().snapshot()
             report.plan_cache = plan_cache().snapshot()
+            report.scheduler = sched.snapshot()
+            report.timeline = sched.timeline
             # Both failure paths carry the partial WorkflowReport (channel
             # stats, gantt events, per-task failures) as ``err.report``, and
             # every secondary task error stays reachable via the __context__
@@ -406,6 +449,17 @@ class Wilkins:
                 raise primary
             return report
         finally:
+            # scheduler teardown mirrors the pool's: close on success and
+            # error paths alike, and always feed the report (the error paths
+            # attach the partial report to the raised exception above, so
+            # err.report.summary() shows scheduler state too)
+            sched.close()
+            if not report.scheduler:
+                report.scheduler = sched.snapshot()
+                report.timeline = sched.timeline
+            for vol in self.vols.values():
+                vol.scheduler = None
+            self._sched_runtime = None
             if pool is not None:
                 pool.shutdown()
                 for ch in self.channels:

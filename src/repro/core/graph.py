@@ -28,6 +28,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import yaml
 
 from .datamodel import match_file, match_path
+from .scheduler import SchedulerConfig
 
 __all__ = ["DsetSpec", "Port", "TaskSpec", "Edge", "WorkflowGraph"]
 
@@ -68,6 +69,14 @@ class Port:
                                     # each channel of this port (0 = sync
                                     # serve; None = default depth whenever
                                     # the port redistributes)
+    weight: int = 1             # inport knob: DWRR share under the `fair`
+                                # scheduler policy -- this port's edges get
+                                # ~weight x the prep completions of a
+                                # weight-1 edge under pool contention
+    autotune: Optional[Tuple[int, int]] = None  # inport knob: (min, max)
+                                # runtime bounds for the prefetch-depth
+                                # autotuner; implies prefetch (initial depth
+                                # clamps into the bounds); None = static
     ownership: bool = False     # outports only: the producer's logical ranks
                                 # own an even decomposition of every written
                                 # dataset; the VOL stamps BlockOwnership at
@@ -108,6 +117,8 @@ class Edge:
     redistribute: bool = False  # consumer inport declared M->N ownership
     redist_axis: int = 0
     prefetch: Optional[int] = None  # consumer inport's per-edge prefetch depth
+    weight: int = 1                 # consumer inport's DWRR scheduler share
+    autotune: Optional[Tuple[int, int]] = None  # depth-autotuner bounds
 
     def instance_links(self, np_: int, nc: int) -> List[Tuple[int, int]]:
         """Round-robin instance pairing over the longer list (paper Fig. 3)."""
@@ -160,6 +171,55 @@ def _parse_port(p: Dict[str, Any], task: str = "?") -> Port:
             raise ValueError(
                 f"task {task!r} port {p['filename']!r}: prefetch depth must "
                 f"be >= 0 (0 = sync serve, N = per-edge depth), got {prefetch}")
+    # ``weight: N`` on a consumer inport: this port's DWRR share under the
+    # top-level ``scheduler: {policy: fair}`` arbitration
+    weight = int(p.get("weight", 1))
+    if weight < 1:
+        raise ValueError(
+            f"task {task!r} port {p['filename']!r}: scheduler weight must be "
+            f">= 1, got {weight}")
+    # ``autotune: 1`` / ``autotune: N`` / ``autotune: {min: A, max: B}`` on a
+    # consumer inport: runtime prefetch-depth bounds for the autotuner.
+    # Spellings: 1/true -> default bounds [1, 8]; an int N >= 2 -> [1, N];
+    # a mapping sets both ends.  min >= 1 always (a zero-depth autotuned
+    # edge could park a producer forever on an unpassable semaphore; use
+    # ``prefetch: 0`` to disable prefetch instead).
+    at = p.get("autotune", None)
+    autotune: Optional[Tuple[int, int]] = None
+    if isinstance(at, dict):
+        unknown = set(at) - {"min", "max"}
+        if unknown:
+            raise ValueError(
+                f"task {task!r} port {p['filename']!r}: unknown autotune keys "
+                f"{sorted(unknown)} (expected min, max)")
+        bounds = {}
+        for key, default in (("min", 1), ("max", 8)):
+            val = at.get(key, default)
+            if isinstance(val, bool) or not isinstance(val, int):
+                raise ValueError(
+                    f"task {task!r} port {p['filename']!r}: autotune {key} "
+                    f"must be an integer depth, got {val!r}")
+            bounds[key] = val
+        autotune = (bounds["min"], bounds["max"])
+    elif at is not None and at is not False and at != 0:
+        if at is True or at == 1:
+            autotune = (1, 8)
+        elif isinstance(at, int) and at >= 2:
+            autotune = (1, at)
+        else:
+            raise ValueError(
+                f"task {task!r} port {p['filename']!r}: autotune must be "
+                f"1/true, a max depth >= 2, or {{min, max}}, got {at!r}")
+    if autotune is not None:
+        amin, amax = autotune
+        if amin < 1:
+            raise ValueError(
+                f"task {task!r} port {p['filename']!r}: autotune min must be "
+                f">= 1, got {amin} (use prefetch: 0 to disable prefetch)")
+        if amax < amin:
+            raise ValueError(
+                f"task {task!r} port {p['filename']!r}: autotune bounds must "
+                f"satisfy min <= max, got [{amin}, {amax}]")
     # ``ownership: 1`` or ``ownership: {axis: A, nranks: K}`` on an outport
     own = p.get("ownership", 0)
     own_axis, own_nranks = 0, None
@@ -184,6 +244,7 @@ def _parse_port(p: Dict[str, Any], task: str = "?") -> Port:
     return Port(filename=p["filename"], dsets=dsets,
                 io_freq=io_freq, queue_depth=qd,
                 redistribute=redist, redist_axis=axis, prefetch=prefetch,
+                weight=weight, autotune=autotune,
                 ownership=own, own_axis=own_axis, own_nranks=own_nranks)
 
 
@@ -210,12 +271,28 @@ def _parse_task(t: Dict[str, Any]) -> TaskSpec:
                 f"task {spec.func!r}: ownership is an outport declaration "
                 f"(inport {p.filename!r} declared it); use redistribute: on "
                 f"inports")
+    for p in spec.inports:
+        if p.autotune is not None and p.prefetch == 0:
+            raise ValueError(
+                f"task {spec.func!r} inport {p.filename!r}: autotune needs "
+                f"prefetch enabled, but the port declares prefetch: 0; drop "
+                f"one of the two")
     for p in spec.outports:
         if p.prefetch is not None:
             raise ValueError(
                 f"task {spec.func!r}: prefetch is an inport declaration "
                 f"(outport {p.filename!r} declared it); it rides the "
                 f"consumer's redistribute port")
+        if p.weight != 1:
+            raise ValueError(
+                f"task {spec.func!r}: weight is an inport declaration "
+                f"(outport {p.filename!r} declared it); the fair scheduler "
+                f"arbitrates consumer edges")
+        if p.autotune is not None:
+            raise ValueError(
+                f"task {spec.func!r}: autotune is an inport declaration "
+                f"(outport {p.filename!r} declared it); depth is a consumer-"
+                f"edge property")
         if p.own_nranks is not None and p.own_nranks not in (
                 spec.nprocs, spec.io_procs):
             raise ValueError(
@@ -228,11 +305,13 @@ def _parse_task(t: Dict[str, Any]) -> TaskSpec:
 class WorkflowGraph:
     """Tasks + matched edges; the driver instantiates channels from this."""
 
-    def __init__(self, tasks: List[TaskSpec]):
+    def __init__(self, tasks: List[TaskSpec],
+                 scheduler: Optional[SchedulerConfig] = None):
         names = [t.func for t in tasks]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate task func names: {names}")
         self.tasks: Dict[str, TaskSpec] = {t.func: t for t in tasks}
+        self.scheduler = scheduler if scheduler is not None else SchedulerConfig()
         self.edges: List[Edge] = self._match()
 
     # ------------------------------------------------------------- loading
@@ -248,7 +327,8 @@ class WorkflowGraph:
             doc = source
         if not isinstance(doc, dict) or "tasks" not in doc:
             raise ValueError("workflow YAML must have a top-level 'tasks' list")
-        return cls([_parse_task(t) for t in doc["tasks"]])
+        return cls([_parse_task(t) for t in doc["tasks"]],
+                   scheduler=SchedulerConfig.from_yaml(doc.get("scheduler")))
 
     # ------------------------------------------------------------ matching
     def _match(self) -> List[Edge]:
@@ -285,6 +365,8 @@ class WorkflowGraph:
                                     redistribute=inp.redistribute,
                                     redist_axis=inp.redist_axis,
                                     prefetch=inp.prefetch,
+                                    weight=inp.weight,
+                                    autotune=inp.autotune,
                                 )
                             )
         return edges

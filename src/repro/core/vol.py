@@ -82,6 +82,11 @@ class VOL:
             "before_dataset_open": None,
         }
 
+        # per-run scheduler runtime (driver-attached): producer file closes
+        # and consumer intercepted opens are the step events that drive the
+        # depth-autotuner / telemetry tick (see scheduler.SchedulerRuntime)
+        self.scheduler = None
+
         self.file_close_counter = 0
         self.dataset_write_counter = 0
         self._unserved: List[File] = []
@@ -214,6 +219,9 @@ class VOL:
             # exactly LowFive's serve-on-close convention.
             self.serve_all(True, True)
             self.clear_files()
+        sched = self.scheduler  # local: the driver may detach it concurrently
+        if sched is not None:
+            sched.notify_step("file_close")
 
     def on_file_open(self, filename: str) -> Optional[File]:
         """Consumer-side open: pull the next version from a matching channel.
@@ -251,6 +259,9 @@ class VOL:
                         with c._lock:
                             c.stats.consumer_wait_s += time.monotonic() - t0
                         self._fire("after_file_open", r)
+                        sched = self.scheduler  # local: driver may detach it
+                        if sched is not None:
+                            sched.notify_step("file_open")
                         return r
                 if not any_live:
                     return None  # all producers report all-done (query protocol)
