@@ -10,6 +10,8 @@
   transport    -> zero-copy fast path (CoW fan-out, mmap spill, queue_depth)
   redistribute -> M->N planned transport (plan cache, slab shipping, aligned
                   fast path, Pallas pack executor)
+  recovery     -> fault-tolerant execution (mid-run crash, checkpointed
+                  restart, replay; byte-exact recovery + latency/overhead)
   roofline     -> §Roofline table from the dry-run grid (not a paper artifact)
 
 ``--smoke`` is the tier-1 entry point: it runs the pytest suite, a small
@@ -18,7 +20,8 @@ fails if any fails (gates: fan-out copy reduction >= 2x, M->N bytes-shipped
 reduction >= 2x, plan-cache hit rate >= 0.9, zero aligned-path copies,
 prefetch overlap >= 0.30, a byte-exact 3-D reshard on the flattened
 pack-kernel path, the autotuned disparate-rate run's consumer blocked_s at
-or below the static-depth baseline, and a telemetry JSON round trip).
+or below the static-depth baseline, a telemetry JSON round trip, and a
+byte-exact mid-run crash recovery with bounded overhead).
 ``WILKINS_SMOKE_SKIP_PYTEST=1`` skips the pytest stage (CI runs the suite
 as its own fast/slow job steps).
 
@@ -37,7 +40,7 @@ import time
 import traceback
 
 SUITES = ("overhead", "flowcontrol", "ensembles", "nucleation", "cosmo",
-          "transport", "redistribute", "roofline")
+          "transport", "redistribute", "recovery", "roofline")
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -96,6 +99,13 @@ def _smoke() -> int:
           f"autotuned_blocked={sr['adaptive']['hot_blocked_s']:.3f}s "
           f"telemetry_roundtrip={sr['telemetry_roundtrip_ok']} "
           f"====", flush=True)
+    print("==== smoke: bench_recovery ====", flush=True)
+    from . import bench_recovery
+    rec = bench_recovery.main(smoke=True)
+    print(f"==== smoke: recovery byte_exact={rec['byte_exact']} "
+          f"restarts={rec['restarts']} replayed={rec['steps_replayed']} "
+          f"latency={rec['recovery_latency_s']:.3f}s "
+          f"overhead={rec['overhead_x']:.2f}x ====", flush=True)
     # gates: M->N shipped-bytes reduction, steady-state plan reuse, aligned
     # zero-copy, the reshard+prefetch pipeline hiding >= 30% of slab-serve
     # time behind consumer compute on the 4->2 edge, the 3-D reshard
@@ -105,7 +115,10 @@ def _smoke() -> int:
     ok = (shipped >= 2.0 and hit_rate >= 0.9 and aligned_copied == 0
           and overlap >= 0.30
           and nd["pack_mode"] is not None and nd["byte_exact"]
-          and sr["blocked_improved"] and sr["telemetry_roundtrip_ok"])
+          and sr["blocked_improved"] and sr["telemetry_roundtrip_ok"]
+          and rec["byte_exact"] and rec["restarts"] == 1
+          and rec["restarts_crash_free"] == 0
+          and rec["steps_replayed"] >= 1 and rec["overhead_ok"])
     return 0 if ok else 1
 
 

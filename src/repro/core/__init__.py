@@ -7,11 +7,15 @@ Layers (paper Fig. 1):
   data transport    -> channel.Channel           (flow control all/some/latest)
                        redistribute              (M->N planning + executors)
   data model / VOL  -> datamodel, vol, h5        (HDF5 data model + interception)
+  fault tolerance   -> recovery.RunSupervisor    (policies, epochs, fault plan)
 """
 
 from . import datamodel, h5, redistribute, scheduler
-from .channel import (Channel, ChannelMux, ChannelStats, ChannelTimeout,
-                      FlowControl, NO_DATA, PrefetchPool)
+from .channel import (Channel, ChannelError, ChannelMux, ChannelStats,
+                      ChannelTimeout, FlowControl, NO_DATA, PrefetchPool)
+from .recovery import (FailurePolicy, FaultPlan, FaultSpec, InjectedFault,
+                       RecoveryContext, RunSupervisor, TaskState,
+                       reshard_blocks)
 from .scheduler import (DepthAutotuner, FairPolicy, FifoPolicy,
                         ResizableSemaphore, SchedulerConfig, SchedulerRuntime,
                         TelemetryTimeline)
@@ -37,11 +41,20 @@ __all__ = [
     "SchedulerRuntime",
     "TelemetryTimeline",
     "Channel",
+    "ChannelError",
     "ChannelMux",
     "ChannelStats",
     "ChannelTimeout",
     "FlowControl",
     "NO_DATA",
+    "FailurePolicy",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "RecoveryContext",
+    "RunSupervisor",
+    "TaskState",
+    "reshard_blocks",
     "TaskComm",
     "world",
     "BlockOwnership",

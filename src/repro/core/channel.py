@@ -41,7 +41,7 @@ import re
 import threading
 import time
 from collections import deque
-from concurrent.futures import Future
+from concurrent.futures import CancelledError, Future
 from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -57,6 +57,7 @@ __all__ = [
     "Channel",
     "ChannelStats",
     "ChannelTimeout",
+    "ChannelError",
     "ChannelMux",
     "NO_DATA",
     "PrefetchPool",
@@ -68,6 +69,22 @@ __all__ = [
 
 class ChannelTimeout(Exception):
     """``Channel.get(timeout=...)`` elapsed with no data and no producer-done."""
+
+
+class ChannelError(Exception):
+    """The peer producer failed permanently (poison pill).
+
+    Raised by ``get``/``try_get`` the moment the driver poisons the channel
+    -- a consumer blocked on a dead producer learns *which* task died and
+    why (the producer's exception is chained as ``__cause__``) instead of
+    waiting out its timeout for an opaque ``ChannelTimeout``.  Carries
+    ``task`` and ``instance`` of the dead producer.
+    """
+
+    def __init__(self, msg: str, task: str = "?", instance: int = -1):
+        super().__init__(msg)
+        self.task = task
+        self.instance = instance
 
 
 class _NoData:
@@ -147,6 +164,13 @@ class PrefetchPool:
         self._cv = threading.Condition()
         self._policy: QueuePolicy = policy if policy is not None else FifoPolicy()
         self._shutdown = False
+        # Error accounting (never drop a prep exception on the floor): every
+        # prep a worker starts is tracked in ``_inflight`` until it settles;
+        # a prep that settles with an exception is remembered in ``_errored``
+        # so ``drain_errors`` can report any error the consumer never
+        # observed via ``fut.result()`` -- the shutdown-race audit.
+        self._inflight: set = set()
+        self._errored: List[Future] = []
         self._threads = [
             threading.Thread(target=self._worker,
                              name=f"{thread_name_prefix}-{i}", daemon=True)
@@ -160,6 +184,7 @@ class PrefetchPool:
         """Enqueue a prep; ``edge``/``weight`` feed the queue policy (the
         FIFO policy ignores them, so plain ``submit(fn)`` is unchanged)."""
         fut: Future = Future()
+        fut._wilkins_edge = edge  # type: ignore[attr-defined]
         with self._cv:
             if self._shutdown:
                 raise RuntimeError("prefetch pool is shut down")
@@ -175,15 +200,53 @@ class PrefetchPool:
                 if not self._policy.pending():
                     return  # shutdown and drained
                 item = self._policy.pop()
+                if item is not None:
+                    # claimed under the SAME cv hold as the pop: drain_errors
+                    # can never observe "not pending, not in flight" for a
+                    # prep a worker is about to run
+                    self._inflight.add(item[0])
             if item is None:  # policy raced empty (defensive)
                 continue
             fut, fn, args = item
-            if not fut.set_running_or_notify_cancel():
-                continue  # cancelled while queued
             try:
-                fut.set_result(fn(*args))
-            except BaseException as e:  # surfaced at delivery via fut.result()
-                fut.set_exception(e)
+                if fut.set_running_or_notify_cancel():
+                    try:
+                        fut.set_result(fn(*args))
+                    except BaseException as e:  # surfaced via fut.result()
+                        fut.set_exception(e)
+            finally:
+                with self._cv:
+                    self._inflight.discard(fut)
+                    if (fut.done() and not fut.cancelled()
+                            and fut.exception() is not None):
+                        self._errored.append(fut)
+                    self._cv.notify_all()
+
+    def drain_errors(self, timeout: Optional[float] = 5.0) -> List[Tuple[Optional[str], BaseException]]:
+        """Wait (bounded) for in-flight preps to settle, then return every
+        prep exception no consumer observed, as ``(edge, exception)`` pairs.
+
+        This closes the shutdown race: ``shutdown(cancel_pending=True)``
+        cancels *queued* preps, but a prep already running on a worker can
+        still error after teardown -- with nobody left to call
+        ``fut.result()``, the exception used to vanish.  The driver calls
+        this after every run and attaches the result to the
+        ``WorkflowReport``.  Errors the consumer did re-raise (delivery
+        marks the future observed) are not double-reported."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        out: List[Tuple[Optional[str], BaseException]] = []
+        with self._cv:
+            while self._inflight or self._policy.pending():
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    break
+                self._cv.wait(timeout=remaining)
+            for fut in self._errored:
+                if not getattr(fut, "_wilkins_observed", False):
+                    fut._wilkins_observed = True  # type: ignore[attr-defined]
+                    out.append((getattr(fut, "_wilkins_edge", None),
+                                fut.exception()))
+        return out
 
     def shutdown(self, cancel_pending: bool = True) -> None:
         """Stop accepting work; cancel queued preps; wake and drain workers.
@@ -257,6 +320,13 @@ class ChannelStats:
     prefetch_prepared_s: float = 0.0
     prefetch_blocked_s: float = 0.0
     inflight_preps: int = 0  # gauge: preps submitted but not yet done
+    # Recovery accounting: serves a restarted producer regenerated that the
+    # consumer already held (skipped), payloads requeued for replay after a
+    # consumer restart, and preps re-run synchronously after an async prep
+    # error (mid-prefetch crash recovery).
+    deduped: int = 0
+    replayed: int = 0
+    prep_retries: int = 0
     # (t, who, what) ring: oldest events roll off past the maxlen, counted
     # in ``events_dropped`` so Gantt consumers know the timeline is truncated
     events: Deque[Tuple[float, str, str]] = field(
@@ -381,8 +451,30 @@ class Channel:
         self._match_cache: Dict[str, bool] = {}
 
         self._lock = threading.Condition()
-        self._queue: Deque[Tuple[str, Any]] = deque()  # bounded ring (queue_depth)
+        # bounded ring (queue_depth) of (kind, payload, seq, epoch, src):
+        # positions 0/1 are the pre-recovery item layout; ``seq`` is the
+        # producer's serve ordinal (dedup watermark), ``epoch`` the
+        # incarnation that queued it, ``src`` the source File kept for
+        # synchronous prep retry (recovery runs only, else None)
+        self._queue: Deque[Tuple[str, Any, int, int, Any]] = deque()
         self._done = False
+        # --- recovery protocol state (see recovery.py) -------------------
+        # producer side: serve seqs are strictly monotonic; ack_producer
+        # snapshots them at a checkpoint so quarantine_producer can rewind.
+        self._serve_seq = 0
+        self._acked_seq = 0
+        self._acked_close_count = 0
+        # consumer side: delivered watermark + ack snapshot + the
+        # delivered-but-unacked payloads quarantine_consumer will replay.
+        self._delivered_seq = 0
+        self._acked_delivered_seq = 0
+        self._replay: List[Tuple[str, Any, int, int, Any]] = []
+        self._replay_enabled = False
+        self._epoch = 0
+        self._poison: Optional[Tuple[str, int, BaseException]] = None
+        self._abandoned = False
+        self._prep_retry = False
+        self._supervisor: Optional[Any] = None  # RunSupervisor (fault hook)
         # Waiter accounting for the `latest` rendezvous decision: one entry
         # per *distinct consumer thread* currently blocked on this channel,
         # with a nesting depth so a thread registered by the VOL mux
@@ -406,6 +498,131 @@ class Channel:
         """Attach the run-scoped prefetch pool (driver-owned); ``None``
         detaches and falls back to the lazy module default."""
         self._prefetch_pool = pool
+
+    # ----------------------------------------------------------- recovery
+    def set_supervisor(self, sup: Optional[Any]) -> None:
+        """Attach the run's ``RunSupervisor`` (fault-injection hook for the
+        async prep path); ``None`` detaches on teardown."""
+        self._supervisor = sup
+
+    def set_replay(self, enabled: bool) -> None:
+        """Track delivered-but-unacked payloads for consumer-restart replay.
+
+        Only enabled when the consumer's policy is a managed restart -- the
+        buffer grows until the consumer checkpoints (cadence guidance in
+        DESIGN.md), so always-on would leak on checkpoint-free runs."""
+        with self._lock:
+            self._replay_enabled = bool(enabled)
+            if not enabled:
+                self._replay.clear()
+
+    def set_prep_retry(self, enabled: bool) -> None:
+        """Recover async prep errors by re-running the (idempotent) prep
+        synchronously at delivery instead of failing the consumer."""
+        self._prep_retry = bool(enabled)
+
+    def ack_producer(self) -> None:
+        """Producer checkpointed: serves so far are durable.  A later
+        ``quarantine_producer`` keeps them queued and rewinds the serve/flow
+        counters to exactly this point."""
+        with self._lock:
+            self._acked_seq = self._serve_seq
+            self._acked_close_count = self._close_count
+
+    def ack_consumer(self) -> None:
+        """Consumer checkpointed: deliveries so far are consumed.  The
+        replay buffer empties; a later ``quarantine_consumer`` replays only
+        payloads delivered after this point."""
+        with self._lock:
+            self._acked_delivered_seq = self._delivered_seq
+            self._replay.clear()
+
+    def _discard_item_locked(self, item: Tuple[str, Any, int, int, Any]) -> None:
+        """Drop one queued item (caller holds the lock): cancel an unfinished
+        prep (marking it observed so ``drain_errors`` does not report a
+        deliberately-quarantined crash), unlink a spill file."""
+        kind, payload = item[0], item[1]
+        self.stats.dropped += 1
+        if kind == "future":
+            payload._wilkins_observed = True
+            if not payload.cancel():
+                self.stats.prefetch_cancelled += 1
+                transport_stats().record_prefetch_cancelled()
+        elif kind == "file":
+            try:
+                os.unlink(payload)
+            except OSError:
+                pass
+
+    def quarantine_producer(self, epoch: int) -> None:
+        """The producer incarnation died: drop its un-acked queued payloads
+        (the restart regenerates them from the checkpoint; in-flight prefetch
+        futures are cancelled, spills unlinked), keep acked-but-undelivered
+        ones, and rewind the serve/flow-control counters to the last ack so
+        the replayed closes line up.  Waiters are woken to re-rendezvous
+        against the new epoch."""
+        with self._lock:
+            kept: Deque[Tuple[str, Any, int, int, Any]] = deque()
+            for item in self._queue:
+                if item[2] > self._acked_seq:
+                    self._discard_item_locked(item)
+                else:
+                    kept.append(item)
+            self._queue = kept
+            self._serve_seq = self._acked_seq
+            self._close_count = self._acked_close_count
+            self._epoch = max(self._epoch, epoch)
+            self._event("producer", f"quarantine:epoch={epoch}")
+            self._lock.notify_all()
+        self._notify_listeners()
+
+    def quarantine_consumer(self, epoch: int) -> None:
+        """The consumer incarnation died: requeue every delivered-but-unacked
+        payload at the head (oldest first) and rewind the dedup watermark to
+        the last ack, so the restarted consumer replays exactly the steps it
+        had not checkpointed.  A producer blocked in ``offer`` keeps waiting
+        for ring space and re-rendezvouses with the new incarnation."""
+        with self._lock:
+            if self._replay:
+                for item in reversed(self._replay):
+                    self._queue.appendleft(item)
+                self.stats.replayed += len(self._replay)
+                self._replay = []
+            self._delivered_seq = self._acked_delivered_seq
+            self._epoch = max(self._epoch, epoch)
+            self._event("consumer", f"quarantine:epoch={epoch}")
+            self._lock.notify_all()
+        self._notify_listeners()
+
+    def poison(self, task: str, instance: int, error: BaseException) -> None:
+        """Producer failed permanently: wake blocked consumers with a
+        ``ChannelError`` naming the dead task (chained to its exception)
+        instead of letting them time out.  Already-queued payloads still
+        deliver first -- they were produced before the failure."""
+        with self._lock:
+            self._poison = (task, instance, error)
+            self._event("producer", "poison")
+            self._lock.notify_all()
+        self._notify_listeners()
+
+    def abandon_consumer(self) -> None:
+        """Consumer gone for good (dropped / failed permanently): queued
+        payloads are discarded and every future ``offer`` becomes a counted
+        drop, so the producer runs on unimpeded instead of parking in the
+        rendezvous wait until the join deadline."""
+        with self._lock:
+            self._abandoned = True
+            for item in self._queue:
+                self._discard_item_locked(item)
+            self._queue.clear()
+            self._event("consumer", "abandoned")
+            self._lock.notify_all()
+        self._notify_listeners()
+
+    @property
+    def epoch(self) -> int:
+        with self._lock:
+            return self._epoch
 
     def set_depth(self, depth: int) -> None:
         """Retune the per-edge prefetch depth at runtime (autotuner hook).
@@ -595,7 +812,13 @@ class Channel:
         when the future's size is known.
         """
         with self._lock:
+            if self._abandoned:
+                # consumer dropped/dead: the serve is a counted no-op
+                self.stats.dropped += 1
+                self._event("producer", "skip_abandoned")
+                return False
             self._close_count += 1
+            step = self._close_count - 1
             if self.strategy == FlowControl.SOME and (self._close_count % self.freq) != 0:
                 self.stats.dropped += 1
                 self._event("producer", "skip_some")
@@ -606,10 +829,24 @@ class Channel:
                 self.stats.dropped += 1
                 self._event("producer", "skip_latest")
                 return False
+            # every SERVED close gets a monotonic seq; a restarted producer
+            # rewound to its last ack regenerates the same seqs, so serves
+            # the consumer already delivered are recognized here and skipped
+            # (exactly-once delivery across producer restarts)
+            self._serve_seq += 1
+            seq = self._serve_seq
+            if seq <= self._delivered_seq:
+                self.stats.deduped += 1
+                self._event("producer", "dedup_replay")
+                return True
+            epoch = self._epoch
             # depth is read under the lock: the autotuner retunes it at
             # runtime via set_depth, also under this lock
             depth = self.prefetch
 
+        # keep the source File only when prep retry may need it (recovery
+        # runs): retry re-filters from the producer's CoW tree at delivery
+        src = f if (depth and self._prep_retry) else None
         if depth:
             # per-edge depth: block until one of this channel's in-flight
             # preps completes (backpressure), never starving other edges
@@ -618,7 +855,7 @@ class Channel:
             try:
                 pool = self._prefetch_pool or _prefetch_pool()
                 fut = pool.submit(self._prepare_timed, f, _payload_cache,
-                                  edge=self.name, weight=self.weight)
+                                  step, edge=self.name, weight=self.weight)
             except BaseException:
                 self._prefetch_sem.release()
                 raise
@@ -627,10 +864,11 @@ class Channel:
             # release the slot + close the gauge on completion, error, or
             # cancel alike (shutdown AND the `latest` stale-prep drop)
             fut.add_done_callback(self._on_prep_done)
-            payload: Tuple[str, Any] = ("future", fut)
+            item: Tuple[str, Any, int, int, Any] = ("future", fut, seq, epoch, src)
             payload_bytes = None
         else:
             payload, payload_bytes = self._prepare(f, _payload_cache)
+            item = (payload[0], payload[1], seq, epoch, None)
         t0 = time.monotonic()
         with self._lock:
             if self.strategy == FlowControl.LATEST and depth:
@@ -639,13 +877,17 @@ class Channel:
                 # bytes nobody will read (`latest` semantics)
                 self._drop_stale_preps_locked()
             self._event("producer", "wait_begin")
-            while len(self._queue) >= self.queue_depth and not self._done:
+            while (len(self._queue) >= self.queue_depth and not self._done
+                   and not self._abandoned):
                 self._lock.wait()
             self.stats.producer_wait_s += time.monotonic() - t0
             self._event("producer", "wait_end")
+            if self._abandoned:
+                self._discard_item_locked(item)
+                return False
             if self._done:
                 return False
-            self._queue.append(payload)
+            self._queue.append(item)
             self.stats.served += 1
             if payload_bytes is not None:
                 self.stats.bytes_moved += payload_bytes
@@ -666,9 +908,10 @@ class Channel:
         gauge).  Finished futures stay queued: their bytes exist, and they
         are still the freshest data until the new step lands.
         """
-        kept: Deque[Tuple[str, Any]] = deque()
+        kept: Deque[Tuple[str, Any, int, int, Any]] = deque()
         dropped = 0
-        for kind, payload in self._queue:
+        for item in self._queue:
+            kind, payload = item[0], item[1]
             if kind == "future" and not payload.done():
                 dropped += 1
                 self.stats.dropped += 1
@@ -677,17 +920,26 @@ class Channel:
                     self.stats.prefetch_cancelled += 1
                     transport_stats().record_prefetch_cancelled()
             else:
-                kept.append((kind, payload))
+                kept.append(item)
         self._queue = kept
         if dropped:
             self._lock.notify_all()  # a freed ring slot unblocks rendezvous
         return dropped
 
     def _prepare_timed(
-        self, f: File, cache: Optional[Dict[Any, File]] = None
+        self, f: File, cache: Optional[Dict[Any, File]] = None, step: int = 0
     ) -> Tuple[Tuple[str, Any], int]:
         """``_prepare`` on the prefetch executor, timed for the overlap
-        accounting (prepared vs consumer-blocked seconds)."""
+        accounting (prepared vs consumer-blocked seconds).
+
+        Fault-injection point ``prefetch`` fires here (on the pool worker,
+        keyed to the *producer* task): an injected crash lands in the
+        future's exception and surfaces at delivery -- exactly the surface a
+        real prep I/O error would use.  The synchronous retry path goes
+        through ``_prepare`` directly and so never re-fires the fault."""
+        sup = self._supervisor
+        if sup is not None:
+            sup.fire(self.producer[0], self.producer[1], "prefetch", step)
         t0 = time.monotonic()
         item, payload_bytes = self._prepare(f, cache)
         dt = time.monotonic() - t0
@@ -772,32 +1024,47 @@ class Channel:
         with self._lock:
             return len(self._waiters)
 
-    def _take(self) -> Tuple[str, Any]:
+    def _take(self) -> Tuple[str, Any, int, int, Any]:
         """Pop under self._lock (caller holds it) and wake the producer."""
         item = self._queue.popleft()
         self._lock.notify_all()
         return item
 
-    def _deliver(self, item: Tuple[str, Any]) -> File:
-        kind, payload = item
+    def _deliver(self, item: Tuple[str, Any, int, int, Any]) -> File:
+        kind, payload, seq, epoch, src = item
         if kind == "future":
             fut: "Future[Tuple[Tuple[str, Any], int]]" = payload
             hit = fut.done()
             t0 = time.monotonic()
             try:
                 inner, payload_bytes = fut.result()  # re-raises prepare errors
-            except BaseException:
-                # A payload that failed to prepare must not leave the
-                # producer parked forever in the rendezvous wait (the sync
-                # path failed fast inside offer; the async path surfaces the
-                # error here, in the consumer that asked for the data, so
-                # mark the channel done to unblock and stop the producer).
-                with self._lock:
-                    self._done = True
-                    self._event("consumer", "prepare_error")
-                    self._lock.notify_all()
-                self._notify_listeners()
-                raise
+                fail = None
+            except BaseException as e:
+                fut._wilkins_observed = True  # consumer saw it: not "dropped"
+                fail = e
+            if fail is not None:
+                if (self._prep_retry and src is not None
+                        and not isinstance(fail, CancelledError)):
+                    # Recovery path: the prep is pure (filter + CoW views of
+                    # the producer's File), so re-run it synchronously here.
+                    # Injected faults live in _prepare_timed, never here.
+                    inner, payload_bytes = self._prepare(src)
+                    with self._lock:
+                        self.stats.prep_retries += 1
+                        self._event("consumer", "prep_retry")
+                else:
+                    # A payload that failed to prepare must not leave the
+                    # producer parked forever in the rendezvous wait (the
+                    # sync path failed fast inside offer; the async path
+                    # surfaces the error here, in the consumer that asked
+                    # for the data, so mark the channel done to unblock and
+                    # stop the producer).
+                    with self._lock:
+                        self._done = True
+                        self._event("consumer", "prepare_error")
+                        self._lock.notify_all()
+                    self._notify_listeners()
+                    raise fail
             blocked = 0.0 if hit else time.monotonic() - t0
             transport_stats().record_prefetch(hit, blocked_s=blocked)
             with self._lock:
@@ -807,7 +1074,7 @@ class Channel:
                 else:
                     self.stats.prefetch_misses += 1
                     self.stats.prefetch_blocked_s += blocked
-            return self._deliver(inner)
+            kind, payload = inner
         self._event("consumer", "recv")
         if kind == "file":
             f = File.load(payload, mmap=True)
@@ -815,8 +1082,16 @@ class Channel:
                 os.unlink(payload)  # np.memmap keeps the mapping alive (POSIX)
             except OSError:
                 pass
-            return f
-        return payload
+        else:
+            f = payload
+        with self._lock:
+            if seq > self._delivered_seq:
+                self._delivered_seq = seq
+            if self._replay_enabled:
+                # a structural CoW view: consumer writes materialize private
+                # copies in the consumer's tree, the replay copy stays intact
+                self._replay.append(("memory", f.view(), seq, epoch, None))
+        return f
 
     def get(self, timeout: Optional[float] = None) -> Optional[File]:
         """Consumer-side blocking receive.
@@ -824,14 +1099,18 @@ class Channel:
         Returns the next ``File``; ``None`` means the producer is all-done
         (query protocol).  If ``timeout`` elapses first, raises
         ``ChannelTimeout`` -- distinct from producer-done, and the elapsed
-        wait still lands in ``consumer_wait_s``.
+        wait still lands in ``consumer_wait_s``.  If the producer FAILED
+        (the driver poisoned the channel), raises ``ChannelError`` naming
+        the dead task immediately -- a blocked consumer is woken, it does
+        not wait out its timeout.  Data queued before the failure still
+        delivers first.
         """
         t0 = time.monotonic()
         deadline = None if timeout is None else t0 + timeout
         with self._lock:
             self._waiter_enter()
             try:
-                while not self._queue and not self._done:
+                while not self._queue and not self._done and self._poison is None:
                     remaining = None if deadline is None else deadline - time.monotonic()
                     if remaining is not None and remaining <= 0:
                         self.stats.consumer_wait_s += time.monotonic() - t0
@@ -840,19 +1119,38 @@ class Channel:
                             f"{self.name}: no data within {timeout}s")
                     self._lock.wait(timeout=remaining)
                 self.stats.consumer_wait_s += time.monotonic() - t0
-                if not self._queue:
+                if self._queue:
+                    item = self._take()
+                elif self._poison is not None:
+                    raise self._poison_error_locked()
+                else:
                     return None  # all done
-                item = self._take()
             finally:
                 self._waiter_exit()
         return self._deliver(item)
 
+    def _poison_error_locked(self) -> ChannelError:
+        """Build the poison-pill exception (caller holds the lock, and
+        RAISES the result -- chained to the producer's own error)."""
+        task, inst, cause = self._poison
+        self._event("consumer", "poisoned")
+        err = ChannelError(
+            f"{self.name}: producer task {task!r} (instance {inst}) failed "
+            f"permanently: {type(cause).__name__}: {cause}",
+            task=task, instance=inst)
+        err.__cause__ = cause
+        return err
+
     def try_get(self) -> Any:
         """Non-blocking receive: a ``File``, ``None`` (producer all-done), or
-        ``NO_DATA`` (queue empty, producer still live)."""
+        ``NO_DATA`` (queue empty, producer still live).  Raises
+        ``ChannelError`` if the producer failed permanently (poison pill --
+        also how ``ChannelMux`` scan loops learn of a dead producer)."""
         with self._lock:
             if self._queue:
                 item = self._take()
+            elif self._poison is not None:
+                raise self._poison_error_locked()
             elif self._done:
                 return None
             else:
@@ -876,8 +1174,10 @@ class Channel:
             return bool(self._queue)
 
     def is_done(self) -> bool:
+        # a poisoned channel with nothing left to deliver is terminal too:
+        # the driver's relaunch loop must stop relaunching its consumer
         with self._lock:
-            return self._done and not self._queue
+            return (self._done or self._poison is not None) and not self._queue
 
     def __repr__(self) -> str:
         return (

@@ -55,6 +55,9 @@ class TaskComm:
     # step boundaries for the depth autotuner via ``comm.step()`` -- useful
     # for compute loops that do no file I/O between timesteps
     scheduler: Any = None
+    # per-instance RecoveryContext (driver-wired when the run has a
+    # supervisor): the checkpoint/restore surface below routes through it
+    recovery: Any = None
 
     def is_io_proc(self, rank: Optional[int] = None) -> bool:
         r = self.rank if rank is None else rank
@@ -102,6 +105,45 @@ class TaskComm:
         its cadence.  No-op standalone (no workflow scheduler wired)."""
         if self.scheduler is not None:
             self.scheduler.notify_step("comm_step")
+
+    # ------------------------------------------------- checkpoint / restore
+    @property
+    def attempt(self) -> int:
+        """Which incarnation of this task instance is running (0 = first
+        launch; restarts increment).  0 standalone."""
+        return self.recovery.attempt if self.recovery is not None else 0
+
+    @property
+    def epoch(self) -> int:
+        """The channel epoch this incarnation serves/receives under."""
+        return self.recovery.epoch if self.recovery is not None else 0
+
+    def checkpoint(self, state: Any, step: Optional[int] = None,
+                   block: bool = True) -> Optional[int]:
+        """Snapshot ``state`` (any pytree) for crash recovery.
+
+        Routed through the run's ``AsyncCheckpointer`` (atomic container +
+        LATEST pointer under the run's spill dir) and then *acks* this
+        instance's channels: everything served/delivered so far is durable,
+        so a restart replays only what came after this call.  Returns the
+        checkpoint step, or ``None`` standalone (no recovery wired) -- task
+        code is identical in and out of a workflow.
+
+        ``block=True`` (default) makes the save durable before acking; see
+        DESIGN.md for the cadence/overhead trade."""
+        if self.recovery is None:
+            return None
+        return self.recovery.checkpoint(state, step=step, block=block)
+
+    def restore(self, like: Any) -> Optional[Tuple[int, Any]]:
+        """(step, state) from this instance's newest checkpoint, or ``None``
+        on a fresh start (including standalone).  Call it first thing in the
+        task function; a restarted incarnation resumes instead of redoing
+        work.  ``like`` supplies the pytree structure/shapes (shape-checked
+        on load)."""
+        if self.recovery is None:
+            return None
+        return self.recovery.restore(like)
 
     # ------------------------------------------------------------- reshard
     def resolve_redist_spec(self, spec: Any = None, port: Optional[str] = None):

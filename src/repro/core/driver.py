@@ -34,11 +34,25 @@ from .channel import Channel, PrefetchPool
 from .comm import TaskComm, pop_comm, push_comm
 from .datamodel import transport_stats
 from .graph import WorkflowGraph
+from .recovery import (FailurePolicy, FaultPlan, RecoveryContext,
+                       RunSupervisor, TaskState)
 from .redistribute import RedistSpec, plan_cache
 from .scheduler import SchedulerRuntime, TelemetryTimeline
 from .vol import VOL, pop_vol, push_vol
 
 __all__ = ["Wilkins", "WorkflowReport", "TaskFailure"]
+
+# Monotonic id per Wilkins instance: checkpoint roots are keyed by
+# (driver, run) so two drivers sharing a spill_dir stay isolated.
+_driver_seq_lock = threading.Lock()
+_driver_seq = 0
+
+
+def _next_driver_seq() -> int:
+    global _driver_seq
+    with _driver_seq_lock:
+        _driver_seq += 1
+        return _driver_seq
 
 
 @dataclass
@@ -67,6 +81,13 @@ class WorkflowReport:
     # exportable as JSON via ``timeline.export(path)`` for offline replay
     scheduler: Dict[str, Any] = field(default_factory=dict)
     timeline: Optional[TelemetryTimeline] = None
+    # recovery outcomes: one dict per RestartEvent (task/instance/attempt/
+    # epoch/reason), the instances a `drop` policy degraded to no-ops, and
+    # async prep errors nobody re-raised (drained from the prefetch pool at
+    # teardown -- the shutdown-race audit; never silently dropped)
+    restarts: List[Dict[str, Any]] = field(default_factory=list)
+    dropped_tasks: List[Tuple[str, int]] = field(default_factory=list)
+    prefetch_errors: List[Tuple[Optional[str], str]] = field(default_factory=list)
 
     @property
     def total_bytes_moved(self) -> int:
@@ -124,12 +145,28 @@ class WorkflowReport:
                 lines.append(
                     f"  retune {d['edge']}: depth {d['old']}->{d['new']} "
                     f"({d['reason']})")
+        replayed = sum(c.stats.replayed for c in self.channels)
+        deduped = sum(c.stats.deduped for c in self.channels)
+        retries = sum(c.stats.prep_retries for c in self.channels)
+        if self.restarts or self.dropped_tasks or replayed or deduped or retries:
+            lines.append(
+                f"recovery: restarts={len(self.restarts)} "
+                f"dropped_tasks={len(self.dropped_tasks)} replayed={replayed} "
+                f"deduped={deduped} prep_retries={retries}")
         for (task, inst), secs in sorted(self.task_times.items()):
             lines.append(
                 f"  {task}[{inst}]: {secs:.3f}s launches={self.task_launches.get((task, inst), 1)}"
             )
         for f in self.failures:
             lines.append(f"  FAILURE {f.task}[{f.instance}] attempt={f.attempt}: {f.error}")
+        for r in self.restarts:
+            lines.append(
+                f"  RESTART {r['task']}[{r['instance']}] after attempt="
+                f"{r['attempt']} -> epoch={r['epoch']}: {r['reason']}")
+        for task, inst in self.dropped_tasks:
+            lines.append(f"  DROPPED {task}[{inst}] (on_failure: drop)")
+        for edge, msg in self.prefetch_errors:
+            lines.append(f"  PREFETCH-ERROR edge={edge}: {msg}")
         return "\n".join(lines)
 
 
@@ -183,12 +220,33 @@ class Wilkins:
         self.action_dirs = list(action_dirs)
         self.zero_copy = zero_copy
 
+        # Per-task failure policies: YAML ``on_failure:`` wins; a task that
+        # declared nothing inherits the legacy ``max_restarts`` budget as an
+        # UNMANAGED restart (relaunch the callable in place, no channel
+        # quarantine / checkpoint restore -- bit-for-bit the pre-recovery
+        # behaviour), or plain ``fail`` when that budget is 0.
+        self.policies: Dict[str, FailurePolicy] = {}
+        for name, t in self.graph.tasks.items():
+            if "on_failure" in t.raw:
+                self.policies[name] = t.on_failure
+            elif max_restarts > 0:
+                self.policies[name] = FailurePolicy(
+                    kind="restart", max_retries=max_restarts, managed=False)
+            else:
+                self.policies[name] = FailurePolicy()
+
         self.device_groups = self._partition_devices(devices)
         self.channels: List[Channel] = []
         self.vols: Dict[Tuple[str, int], VOL] = {}
         # per-run scheduling state (set for the duration of ``run``): step
         # events from the VOLs / TaskComms tick the autotuner + telemetry
         self._sched_runtime: Optional[SchedulerRuntime] = None
+        # per-instance checkpoint surfaces (wired onto TaskComms per run)
+        self._recovery_ctx: Dict[Tuple[str, int], RecoveryContext] = {}
+        self._run_seq = 0  # distinguishes checkpoint roots across run() calls
+        # ...and across Wilkins INSTANCES: two drivers sharing the default
+        # per-pid spill dir must never restore each other's checkpoints
+        self._driver_seq = _next_driver_seq()
         self._build()
 
     # ------------------------------------------------------------ resources
@@ -311,65 +369,135 @@ class Wilkins:
             scheduler=self._sched_runtime,
         )
 
-    def _run_instance(self, name: str, inst: int, report: WorkflowReport) -> None:
+    def _run_instance(self, name: str, inst: int, report: WorkflowReport,
+                      sup: RunSupervisor) -> None:
+        """Supervised task lifecycle: RUNNING -> (FAILED -> RESTARTING)* ->
+        DONE | DROPPED, per the task's ``on_failure`` policy.
+
+        The outer loop is the restart loop (one iteration per incarnation);
+        the inner loop is the query-protocol relaunch loop for stateless
+        consumers (§3.5.1) -- unchanged from the pre-recovery driver.  A
+        MANAGED restart quarantines this instance's channels under a fresh
+        epoch and resets the VOL before relaunching, so the new incarnation
+        re-rendezvouses cleanly and replays from its last checkpoint; the
+        legacy unmanaged budget (``Wilkins(max_restarts=N)``) relaunches in
+        place with no surgery, exactly as before.
+        """
         t = self.graph.tasks[name]
         vol = self.vols[(name, inst)]
-        comm = self._make_comm(name, inst)
         fn = self.funcs[name]
-        if t.actions is not None:
-            action = actions_mod.load_action(t.actions, self.action_dirs)
-            action(vol, comm.rank)
+        policy = sup.policy_for(name)
+        rc = self._recovery_ctx.get((name, inst))
 
         t0 = time.monotonic()
         launches = 0
         attempt = 0
         try:
-            while True:
-                launches += 1
-                push_vol(vol)
-                push_comm(comm)
+            while True:  # restart loop: one iteration per incarnation
+                sup.mark(name, inst, TaskState.RUNNING)
+                if attempt == 0 and t.actions is not None:
+                    action = actions_mod.load_action(t.actions, self.action_dirs)
+                    action(vol, 0)
+                comm = self._make_comm(name, inst)
+                if rc is not None:
+                    rc.attempt = attempt
+                    rc.epoch = sup.epoch(name, inst)
+                    comm.recovery = rc
                 try:
-                    if _takes_arg(fn):
-                        fn(comm)
-                    else:
-                        fn()
-                except Exception as e:  # fault tolerance: restart budget
+                    sup.fire(name, inst, "start", attempt)
+                    while True:  # query-protocol relaunch loop
+                        launches += 1
+                        push_vol(vol)
+                        push_comm(comm)
+                        try:
+                            if _takes_arg(fn):
+                                fn(comm)
+                            else:
+                                fn()
+                        finally:
+                            pop_comm()
+                            pop_vol()
+                        # Query protocol (§3.5.1): if this task consumes and
+                        # any matched producer is still live or has pending
+                        # data, the consumer is stateless -- relaunch it for
+                        # the next datum.  Only PURE consumers participate: a
+                        # task that also produces (intermediate / steering
+                        # node in a cycle) is stateful by construction --
+                        # relaunching it would livelock the cycle.
+                        if vol.incoming and not vol.outgoing and any(
+                            (not c.is_done()) or c.peek_pending()
+                            for c in vol.incoming
+                        ):
+                            continue
+                        break
+                except Exception as e:
                     report.failures.append(
-                        TaskFailure(name, inst, attempt, f"{type(e).__name__}: {e}")
+                        TaskFailure(name, inst, attempt,
+                                    f"{type(e).__name__}: {e}")
                     )
-                    attempt += 1
-                    if attempt > self.max_restarts:
-                        raise
-                    continue
-                finally:
-                    pop_comm()
-                    pop_vol()
-                # Query protocol (§3.5.1): if this task consumes and any
-                # matched producer is still live or has pending data, the
-                # consumer is stateless -- relaunch it for the next datum.
-                # Only PURE consumers participate: a task that also produces
-                # (intermediate / steering node in a cycle) is stateful by
-                # construction -- relaunching it would livelock the cycle.
-                if vol.incoming and not vol.outgoing and any(
-                    (not c.is_done()) or c.peek_pending() for c in vol.incoming
-                ):
-                    continue
-                break
+                    sup.mark(name, inst, TaskState.FAILED)
+                    if policy.kind == "restart" and attempt < policy.max_retries:
+                        if policy.managed:
+                            ev = sup.begin_restart(name, inst, e, vol=vol)
+                            report.restarts.append(ev.as_dict())
+                            sched = self._sched_runtime
+                            if sched is not None:
+                                sched.notify_restart(name, inst, attempt,
+                                                     ev.epoch, ev.reason)
+                            delay = policy.backoff(name, inst, attempt)
+                            if delay > 0:
+                                time.sleep(delay)
+                        attempt += 1
+                        continue
+                    if policy.kind == "drop":
+                        # optional task: degrade its edges to no-ops and let
+                        # the rest of the workflow run to completion
+                        sup.drop(name, inst)
+                        report.dropped_tasks.append((name, inst))
+                        sched = self._sched_runtime
+                        if sched is not None:
+                            sched.timeline.record_event(
+                                "drop", task=name, instance=inst,
+                                attempt=attempt,
+                                reason=f"{type(e).__name__}: {e}")
+                        return
+                    raise  # fail (or retries exhausted): chain per PR 3
+                sup.mark(name, inst, TaskState.DONE)
+                return
         finally:
             vol.finalize()
             report.task_times[(name, inst)] = time.monotonic() - t0
             report.task_launches[(name, inst)] = launches
 
-    def run(self, timeout: Optional[float] = None) -> WorkflowReport:
+    def run(self, timeout: Optional[float] = None,
+            faults: Optional[Any] = None) -> WorkflowReport:
+        """Run the workflow to completion.
+
+        ``faults`` threads a deterministic fault-injection plan through the
+        run: a ``recovery.FaultPlan``, a single ``FaultSpec`` (or its dict
+        spelling), or a list of either.  Injected crashes take the same
+        failure paths real errors do -- policies, quarantine, poison pills
+        and all -- which is what makes every recovery path testable without
+        flaky sleeps."""
         report = WorkflowReport(channels=self.channels)
         threads: List[threading.Thread] = []
         errors: List[BaseException] = []
 
+        # The run's supervisor: lifecycle states, epochs, fault firing, and
+        # the channel surgery for restart / drop / permanent failure.
+        sup = RunSupervisor(self.policies, self.channels,
+                            faults=FaultPlan.coerce(faults))
+
         def runner(name: str, inst: int) -> None:
             try:
-                self._run_instance(name, inst, report)
+                self._run_instance(name, inst, report, sup)
             except BaseException as e:
                 errors.append(e)
+                # poison our outgoing channels FIRST: consumers blocked in
+                # get() raise a ChannelError naming us instead of waiting
+                # out their timeout (finalize()'s producer-done races this,
+                # but get() checks poison before done, so the error wins)
+                sup.poison(name, inst, e)
                 # unblock everyone coupled to us
                 self.vols[(name, inst)].finalize()
 
@@ -398,6 +526,33 @@ class Wilkins:
                 ch.autotune is not None for ch in self.channels):
             for vol in self.vols.values():
                 vol.scheduler = sched
+        # Recovery wiring, gated on actually being able to recover (managed
+        # restart/drop policies or an injected fault plan): VOLs get the
+        # supervisor (fault points + epoch stamping), channels get the fault
+        # hook for async preps, prep-error retry, and -- on edges into a
+        # managed-restart consumer -- the replay buffer.  Every instance
+        # gets a RecoveryContext so ``comm.checkpoint()/restore()`` work
+        # (they are cheap, lazy, and no-ops-by-absence standalone).
+        recovery_on = sup.recovery_active
+        if recovery_on:
+            for vol in self.vols.values():
+                vol.supervisor = sup
+            for ch in self.channels:
+                ch.set_supervisor(sup)
+                ch.set_prep_retry(True)
+                cpol = sup.policy_for(ch.consumer[0])
+                if cpol.kind == "restart" and cpol.managed:
+                    ch.set_replay(True)
+        self._recovery_ctx = {}
+        # per-run checkpoint root: a second run() of the same Wilkins must
+        # start fresh, not restore the previous run's checkpoints
+        self._run_seq += 1
+        ck_root = os.path.join(
+            self.spill_dir, f"ckpt_d{self._driver_seq}_run{self._run_seq}")
+        for (name, i), vol in self.vols.items():
+            self._recovery_ctx[(name, i)] = RecoveryContext(
+                name, i, os.path.join(ck_root, f"{name}_{i}"),
+                incoming=vol.incoming, outgoing=vol.outgoing)
         total_depth = sum(ch.max_prefetch_depth for ch in self.channels)
         pool: Optional[PrefetchPool] = None
         if total_depth:
@@ -428,10 +583,20 @@ class Wilkins:
                 if th.is_alive():
                     hung.append(th.name)
             report.wall_time_s = time.monotonic() - t0
+            # Tear the prefetch pool down HERE (not only in the finally) so
+            # any prep exception the shutdown raced -- erroring on a worker
+            # after the consumers already exited -- lands on the report
+            # instead of vanishing with the daemon worker.
+            if pool is not None:
+                pool.shutdown()
+                report.prefetch_errors = [
+                    (edge, f"{type(e).__name__}: {e}")
+                    for edge, e in pool.drain_errors(timeout=5.0)]
             sched.close()  # final telemetry sample before the snapshot
             report.transport = transport_stats().snapshot()
             report.plan_cache = plan_cache().snapshot()
             report.scheduler = sched.snapshot()
+            report.scheduler["recovery"] = sup.snapshot()
             report.timeline = sched.timeline
             # Both failure paths carry the partial WorkflowReport (channel
             # stats, gantt events, per-task failures) as ``err.report``, and
@@ -456,14 +621,25 @@ class Wilkins:
             sched.close()
             if not report.scheduler:
                 report.scheduler = sched.snapshot()
+                report.scheduler["recovery"] = sup.snapshot()
                 report.timeline = sched.timeline
             for vol in self.vols.values():
                 vol.scheduler = None
+                vol.supervisor = None
             self._sched_runtime = None
             if pool is not None:
                 pool.shutdown()
+                if not report.prefetch_errors:
+                    report.prefetch_errors = [
+                        (edge, f"{type(e).__name__}: {e}")
+                        for edge, e in pool.drain_errors(timeout=5.0)]
                 for ch in self.channels:
                     ch.set_prefetch_pool(None)
+            if recovery_on:
+                for ch in self.channels:
+                    ch.set_supervisor(None)
+                    ch.set_prep_retry(False)
+                    ch.set_replay(False)
 
 
 def _chain_errors(

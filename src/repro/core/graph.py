@@ -28,6 +28,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import yaml
 
 from .datamodel import match_file, match_path
+from .recovery import FailurePolicy
 from .scheduler import SchedulerConfig
 
 __all__ = ["DsetSpec", "Port", "TaskSpec", "Edge", "WorkflowGraph"]
@@ -96,6 +97,10 @@ class TaskSpec:
     actions: Optional[Tuple[str, str]] = None  # (script/module, function)
     inports: List[Port] = field(default_factory=list)
     outports: List[Port] = field(default_factory=list)
+    # YAML ``on_failure:`` -- fail (default, today's chained-error behavior),
+    # restart: {max_retries, backoff_s, jitter}, or drop (optional task:
+    # edges degrade to no-ops).  See recovery.FailurePolicy.
+    on_failure: FailurePolicy = field(default_factory=FailurePolicy)
     raw: Dict[str, Any] = field(default_factory=dict)
 
     @property
@@ -263,6 +268,7 @@ def _parse_task(t: Dict[str, Any]) -> TaskSpec:
         actions=actions,
         inports=[_parse_port(p, t["func"]) for p in t.get("inports", [])],
         outports=[_parse_port(p, t["func"]) for p in t.get("outports", [])],
+        on_failure=FailurePolicy.from_yaml(t.get("on_failure"), t["func"]),
         raw=dict(t),
     )
     for p in spec.inports:

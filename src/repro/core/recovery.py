@@ -1,0 +1,574 @@
+"""Fault-tolerant execution: task supervision, checkpointed restart, and a
+deterministic fault-injection harness.
+
+Wilkins promises resilient coupling of tasks with disparate data rates, but a
+single crash used to kill the whole run -- the error chaining reported the
+failure cleanly, yet nothing recovered.  This module turns the transport's
+existing machinery (epochal channels, the reshard ``PlanCache``,
+``train/checkpoint.py``'s ``AsyncCheckpointer``) into a recovery feature:
+
+* **FailurePolicy** -- the per-task YAML ``on_failure:`` declaration:
+
+  - ``fail``    (default): today's behaviour -- the error is chained onto the
+    run's primary exception and the partial ``WorkflowReport`` rides on it.
+    Additionally the dead task's outgoing channels are *poisoned* so a
+    consumer blocked in ``Channel.get()`` raises a ``ChannelError`` naming
+    the dead task immediately instead of waiting out its timeout.
+  - ``restart: {max_retries, backoff_s, jitter}``: the supervisor quarantines
+    the failed instance's channels under a new epoch, restores task state
+    through ``TaskComm.checkpoint()/restore()``, and relaunches the callable.
+    Jitter is *deterministic* (hashed from task/instance/attempt), so
+    recovery paths are testable without flaky sleeps.
+  - ``drop``: optional analysis tasks degrade to no-ops -- outgoing channels
+    finish (consumers see producer-done), incoming channels are abandoned
+    (producers' offers turn into counted drops instead of blocking).
+
+* **FaultPlan / FaultSpec / InjectedFault** -- deterministic fault injection
+  at named points (``start``, ``close``, ``open``, ``recv``, ``prefetch``)
+  keyed by (task, instance, step, attempt).  Threaded through
+  ``Wilkins.run(faults=...)``; every recovery path is reachable from a test
+  without sleeping for "long enough".
+
+* **RunSupervisor** -- the per-run object the driver owns: task lifecycle
+  states (RUNNING -> FAILED -> RESTARTING -> DONE / DROPPED), per-instance
+  epoch + attempt counters, fault firing, and the channel surgery for
+  quarantine / poison / drop.
+
+* **RecoveryContext** -- the per-instance face of ``TaskComm.checkpoint()``
+  and ``TaskComm.restore()``: saves through ``AsyncCheckpointer`` (atomic
+  directories, LATEST pointer) and *acks* the instance's channels -- a
+  producer's serves up to the checkpoint are durable (quarantine keeps
+  them), a consumer's deliveries up to the checkpoint are consumed
+  (quarantine replays only what came after).
+
+* **reshard_blocks** -- restores taken at one rank count replay onto another
+  through a cached ``PlanCache`` reshard plan (the live M->N rescale face of
+  the redistribution subsystem).
+
+Nothing here imports driver/graph/channel -- channels and vols are duck-typed
+(``quarantine_producer``, ``poison``, ``producer``/``consumer`` tuples), so
+``graph.py`` and ``channel.py`` can both import this module without cycles.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+__all__ = [
+    "FailurePolicy",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "FAULT_KINDS",
+    "FAULT_POINTS",
+    "TaskState",
+    "RestartEvent",
+    "RecoveryContext",
+    "RunSupervisor",
+    "reshard_blocks",
+]
+
+
+# ---------------------------------------------------------------------------
+# failure policy (YAML `on_failure:` per task)
+# ---------------------------------------------------------------------------
+POLICY_KINDS = ("fail", "restart", "drop")
+
+
+@dataclass(frozen=True)
+class FailurePolicy:
+    """Per-task failure handling, parsed from the YAML ``on_failure:`` block.
+
+    ``managed`` distinguishes a YAML-declared restart (full recovery protocol:
+    epoch quarantine, checkpoint restore, replay) from the legacy
+    ``Wilkins(max_restarts=N)`` budget, which restarts the callable *without*
+    channel surgery -- bit-for-bit the pre-recovery behaviour.
+    """
+
+    kind: str = "fail"
+    max_retries: int = 0
+    backoff_s: float = 0.0
+    jitter: float = 0.0
+    managed: bool = True
+
+    def backoff(self, task: str, instance: int, attempt: int) -> float:
+        """Exponential backoff with DETERMINISTIC jitter.
+
+        The jitter term is hashed from (task, instance, attempt), not drawn
+        from a RNG: two runs of the same workflow with the same fault plan
+        recover on the same schedule, which is what makes the recovery suite
+        assertable without sleeps-and-hope."""
+        if self.backoff_s <= 0 and self.jitter <= 0:
+            return 0.0
+        base = self.backoff_s * (2 ** attempt)
+        if self.jitter > 0:
+            h = hashlib.sha256(
+                f"{task}:{instance}:{attempt}".encode()).digest()
+            u = int.from_bytes(h[:8], "little") / 2 ** 64  # [0, 1)
+            base += self.jitter * u
+        return base
+
+    @classmethod
+    def from_yaml(cls, doc: Any, task: str = "?") -> "FailurePolicy":
+        """Parse ``on_failure:`` with the task named in every error.
+
+        Accepted spellings::
+
+            on_failure: fail                 # default (today's behaviour)
+            on_failure: drop                 # optional task: degrade to no-op
+            on_failure: restart              # restart with defaults
+            on_failure:
+              restart: {max_retries: 3, backoff_s: 0.1, jitter: 0.05}
+        """
+        if doc is None:
+            return cls()
+        if isinstance(doc, str):
+            if doc == "restart":
+                return cls(kind="restart", max_retries=1)
+            if doc in ("fail", "drop"):
+                return cls(kind=doc)
+            raise ValueError(
+                f"task {task!r}: on_failure {doc!r} is invalid; use one of "
+                f"{POLICY_KINDS} (or a restart: mapping)")
+        if isinstance(doc, dict):
+            unknown = set(doc) - {"restart"}
+            if unknown:
+                raise ValueError(
+                    f"task {task!r}: unknown on_failure keys "
+                    f"{sorted(unknown)} (expected a restart: mapping, or the "
+                    f"strings fail/drop/restart)")
+            r = doc.get("restart")
+            if r is None:
+                raise ValueError(
+                    f"task {task!r}: on_failure mapping must carry a "
+                    f"restart: block")
+            if not isinstance(r, dict):
+                raise ValueError(
+                    f"task {task!r}: on_failure restart must be a mapping "
+                    f"{{max_retries, backoff_s, jitter}}, got {r!r}")
+            bad = set(r) - {"max_retries", "backoff_s", "jitter"}
+            if bad:
+                raise ValueError(
+                    f"task {task!r}: unknown on_failure restart keys "
+                    f"{sorted(bad)} (expected max_retries, backoff_s, jitter)")
+            retries = int(r.get("max_retries", 1))
+            if retries < 1:
+                raise ValueError(
+                    f"task {task!r}: on_failure restart max_retries must be "
+                    f">= 1, got {retries} (use on_failure: fail for no "
+                    f"restarts)")
+            backoff = float(r.get("backoff_s", 0.0))
+            if backoff < 0:
+                raise ValueError(
+                    f"task {task!r}: on_failure restart backoff_s must be "
+                    f">= 0, got {backoff}")
+            jitter = float(r.get("jitter", 0.0))
+            if jitter < 0:
+                raise ValueError(
+                    f"task {task!r}: on_failure restart jitter must be >= 0, "
+                    f"got {jitter}")
+            return cls(kind="restart", max_retries=retries,
+                       backoff_s=backoff, jitter=jitter)
+        raise ValueError(
+            f"task {task!r}: on_failure must be fail/drop/restart or a "
+            f"restart: mapping, got {doc!r}")
+
+
+# ---------------------------------------------------------------------------
+# deterministic fault injection
+# ---------------------------------------------------------------------------
+FAULT_KINDS = ("crash", "stall", "slow_io")
+#: named injection points: ``start`` fires at task-callable launch (step =
+#: attempt), ``close`` at producer file close *before* the serve, ``open`` at
+#: consumer intercepted open *before* any delivery, ``recv`` after a payload
+#: was delivered but before task code sees it (the replay-protocol window),
+#: ``prefetch`` inside the async payload prep on the pool worker.
+FAULT_POINTS = ("start", "close", "open", "recv", "prefetch")
+
+
+class InjectedFault(RuntimeError):
+    """A crash raised by the fault-injection harness (never by real code)."""
+
+    def __init__(self, task: str, instance: int, point: str, step: int,
+                 attempt: int):
+        super().__init__(
+            f"injected crash: {task}[{instance}] at {point} step={step} "
+            f"attempt={attempt}")
+        self.task = task
+        self.instance = instance
+        self.point = point
+        self.step = step
+        self.attempt = attempt
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault: fires when (task, instance, point, step,
+    attempt) all match.  ``instance``/``step``/``attempt`` of ``None`` match
+    anything; ``times`` bounds total firings (default once).  ``seconds`` is
+    the stall / slow-io duration."""
+
+    task: str
+    kind: str = "crash"
+    point: str = "close"
+    instance: Optional[int] = None
+    step: Optional[int] = None
+    attempt: Optional[int] = 0
+    times: Optional[int] = 1
+    seconds: float = 0.05
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"fault kind {self.kind!r} is invalid; use one of {FAULT_KINDS}")
+        if self.point not in FAULT_POINTS:
+            raise ValueError(
+                f"fault point {self.point!r} is invalid; use one of "
+                f"{FAULT_POINTS}")
+        if self.seconds < 0:
+            raise ValueError(f"fault seconds must be >= 0, got {self.seconds}")
+        if self.times is not None and self.times < 1:
+            raise ValueError(f"fault times must be >= 1, got {self.times}")
+
+    def matches(self, task: str, instance: int, point: str, step: int,
+                attempt: int) -> bool:
+        return (self.task == task and self.point == point
+                and (self.instance is None or self.instance == instance)
+                and (self.step is None or self.step == step)
+                and (self.attempt is None or self.attempt == attempt))
+
+
+class FaultPlan:
+    """An ordered set of ``FaultSpec``s with per-spec firing budgets.
+
+    ``fire`` is called from the VOL hooks / prefetch preps with the current
+    (task, instance, point, step, attempt) coordinates; a matching ``crash``
+    spec raises ``InjectedFault``, ``stall``/``slow_io`` sleep for
+    ``seconds``.  Counting is thread-safe (preps fire from pool workers).
+    """
+
+    def __init__(self, specs: Sequence[Union[FaultSpec, Dict[str, Any]]] = ()):
+        self.specs: List[FaultSpec] = [
+            s if isinstance(s, FaultSpec) else FaultSpec(**s) for s in specs]
+        self._fired: Dict[int, int] = {}
+        self._lock = threading.Lock()
+        self.log: List[Tuple[str, str, int, str, int, int]] = []
+
+    @classmethod
+    def coerce(cls, faults: Any) -> Optional["FaultPlan"]:
+        if faults is None:
+            return None
+        if isinstance(faults, FaultPlan):
+            return faults
+        if isinstance(faults, (FaultSpec, dict)):
+            return cls([faults])
+        return cls(list(faults))
+
+    def fire(self, task: str, instance: int, point: str, step: int,
+             attempt: int) -> None:
+        for i, spec in enumerate(self.specs):
+            if not spec.matches(task, instance, point, step, attempt):
+                continue
+            with self._lock:
+                n = self._fired.get(i, 0)
+                if spec.times is not None and n >= spec.times:
+                    continue
+                self._fired[i] = n + 1
+                self.log.append((spec.kind, task, instance, point, step,
+                                 attempt))
+            if spec.kind == "crash":
+                raise InjectedFault(task, instance, point, step, attempt)
+            time.sleep(spec.seconds)  # stall / slow_io
+
+    def fired(self) -> int:
+        with self._lock:
+            return sum(self._fired.values())
+
+
+# ---------------------------------------------------------------------------
+# lifecycle
+# ---------------------------------------------------------------------------
+class TaskState:
+    PENDING = "PENDING"
+    RUNNING = "RUNNING"
+    FAILED = "FAILED"
+    RESTARTING = "RESTARTING"
+    DONE = "DONE"
+    DROPPED = "DROPPED"
+
+
+@dataclass
+class RestartEvent:
+    t: float
+    task: str
+    instance: int
+    attempt: int          # the attempt that FAILED (restart launches attempt+1)
+    epoch: int            # the new epoch the instance restarts into
+    reason: str
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"t": self.t, "task": self.task, "instance": self.instance,
+                "attempt": self.attempt, "epoch": self.epoch,
+                "reason": self.reason}
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restore surface (TaskComm.checkpoint / restore)
+# ---------------------------------------------------------------------------
+class RecoveryContext:
+    """Per-instance checkpoint surface, wired onto the TaskComm by the driver.
+
+    ``checkpoint(state)`` snapshots a pytree through ``AsyncCheckpointer``
+    (atomic container + LATEST pointer) and then *acks* the instance's
+    channels: serves/deliveries up to this point are durable, so a later
+    quarantine keeps them and replays only what came after.  ``restore``
+    returns ``(step, state)`` from the newest checkpoint, or ``None`` on a
+    fresh start.  Both are no-ops-by-absence: standalone task code (no
+    workflow) sees ``comm.checkpoint(...) is None`` and runs unchanged.
+    """
+
+    def __init__(self, task: str, instance: int, directory: str,
+                 incoming: Sequence[Any] = (), outgoing: Sequence[Any] = ()):
+        self.task = task
+        self.instance = instance
+        self.directory = directory
+        self.incoming = list(incoming)
+        self.outgoing = list(outgoing)
+        self.attempt = 0
+        self.epoch = 0
+        self._ck = None
+        self._next_step = 0
+        self._lock = threading.Lock()
+
+    def _checkpointer(self):
+        # lazy: tasks that never checkpoint never create the directory
+        with self._lock:
+            if self._ck is None:
+                from ..train.checkpoint import AsyncCheckpointer
+                self._ck = AsyncCheckpointer(self.directory, keep=3)
+            return self._ck
+
+    def checkpoint(self, state: Any, step: Optional[int] = None,
+                   block: bool = True) -> int:
+        """Save ``state`` and ack this instance's channels.
+
+        ``block=True`` (the default) waits for the container to be durable
+        before acking -- the ack is what tells quarantine "steps up to here
+        are consumed/served", so acking an un-durable checkpoint would lose
+        data on a crash in the write window.  ``block=False`` overlaps the
+        write with compute at the cost of that window (cadence guidance in
+        DESIGN.md)."""
+        ck = self._checkpointer()
+        if step is None:
+            step = self._next_step
+        ck.save(step, state, block=block)
+        self._next_step = step + 1
+        self.ack()
+        return step
+
+    def ack(self) -> None:
+        """Mark everything served/delivered so far as durable (checkpointed)."""
+        for ch in self.outgoing:
+            ch.ack_producer()
+        for ch in self.incoming:
+            ch.ack_consumer()
+
+    def restore(self, like: Any) -> Optional[Tuple[int, Any]]:
+        """(step, state) from the newest checkpoint, or None on fresh start."""
+        from ..train.checkpoint import restore_latest
+        out = restore_latest(self.directory, like)
+        if out is not None:
+            self._next_step = out[0] + 1
+        return out
+
+
+# ---------------------------------------------------------------------------
+# live M->N rescale of restored state (PlanCache replay)
+# ---------------------------------------------------------------------------
+def reshard_blocks(blocks: Sequence[Any], new_nranks: int,
+                   axis: int = 0) -> List[Any]:
+    """Re-split per-rank blocks saved by M ranks onto N ranks.
+
+    The checkpointed decomposition (M contiguous blocks along ``axis``)
+    becomes the src side of a redistribution plan and the even N-way split is
+    the dst side; the plan comes from the process-wide ``PlanCache`` (so a
+    whole ensemble restoring at a new scale compiles the M->N intersection
+    once) and executes as the scatter path -- the global array is never
+    stitched.  This is how a restart at a different rank count replays a
+    checkpoint: the reshard machinery, turned from a startup feature into a
+    recovery feature."""
+    import numpy as np
+
+    from .redistribute import even_blocks, plan_cache
+
+    arrs = [np.asarray(b) for b in blocks]
+    if not arrs:
+        raise ValueError("reshard_blocks needs at least one source block")
+    if new_nranks < 1:
+        raise ValueError(f"new_nranks must be >= 1, got {new_nranks}")
+    nd = arrs[0].ndim
+    if not 0 <= axis < nd:
+        raise ValueError(f"axis {axis} out of range for rank-{nd} blocks")
+    gshape = list(arrs[0].shape)
+    gshape[axis] = sum(a.shape[axis] for a in arrs)
+    gshape = tuple(gshape)
+    src = []
+    off = 0
+    for a in arrs:
+        if tuple(a.shape[:axis]) + tuple(a.shape[axis + 1:]) != \
+                tuple(gshape[:axis]) + tuple(gshape[axis + 1:]):
+            raise ValueError(
+                f"source blocks disagree off-axis: {a.shape} vs global "
+                f"{gshape} along axis {axis}")
+        starts = tuple(off if d == axis else 0 for d in range(nd))
+        src.append((starts, tuple(a.shape)))
+        off += a.shape[axis]
+    dst = even_blocks(gshape, new_nranks, axis=axis)
+    plan = plan_cache().get(src, dst, gshape, arrs[0].dtype)
+    return plan.execute(arrs)
+
+
+# ---------------------------------------------------------------------------
+# the per-run supervisor
+# ---------------------------------------------------------------------------
+class RunSupervisor:
+    """Per-run task supervision: lifecycle states, epochs, fault firing, and
+    the channel surgery behind restart / drop / permanent failure.
+
+    The driver owns one per ``run()``; channels and VOLs get a reference for
+    the duration (fault injection + epoch stamping) and are detached on
+    teardown.  All channel mutation happens through the channels' own
+    epoch-aware verbs (``quarantine_producer``/``quarantine_consumer``/
+    ``poison``/``abandon_consumer``/``finish``), so the supervisor holds no
+    channel locks itself.
+    """
+
+    def __init__(self, policies: Dict[str, FailurePolicy],
+                 channels: Sequence[Any],
+                 faults: Optional[FaultPlan] = None):
+        self.policies = dict(policies)
+        self.channels = list(channels)
+        self.faults = faults
+        self._lock = threading.Lock()
+        self._state: Dict[Tuple[str, int], str] = {}
+        self._attempt: Dict[Tuple[str, int], int] = {}
+        self._epoch: Dict[Tuple[str, int], int] = {}
+        self.restarts: List[RestartEvent] = []
+        self.dropped: List[Tuple[str, int]] = []
+
+    # ------------------------------------------------------------- queries
+    def policy_for(self, task: str) -> FailurePolicy:
+        return self.policies.get(task, FailurePolicy())
+
+    def attempt(self, task: str, instance: int) -> int:
+        with self._lock:
+            return self._attempt.get((task, instance), 0)
+
+    def epoch(self, task: str, instance: int) -> int:
+        with self._lock:
+            return self._epoch.get((task, instance), 0)
+
+    def state(self, task: str, instance: int) -> str:
+        with self._lock:
+            return self._state.get((task, instance), TaskState.PENDING)
+
+    def states(self) -> Dict[Tuple[str, int], str]:
+        with self._lock:
+            return dict(self._state)
+
+    @property
+    def recovery_active(self) -> bool:
+        """True when this run can exercise recovery paths (managed restart
+        policies or injected faults) -- gates the prep-retry fast path."""
+        return self.faults is not None or any(
+            p.kind in ("restart", "drop") and p.managed
+            for p in self.policies.values())
+
+    # ----------------------------------------------------------- lifecycle
+    def mark(self, task: str, instance: int, state: str) -> None:
+        with self._lock:
+            self._state[(task, instance)] = state
+
+    def fire(self, task: str, instance: int, point: str, step: int) -> None:
+        """Fault-injection hook: no-op without a plan."""
+        if self.faults is not None:
+            self.faults.fire(task, instance, point, step,
+                             self.attempt(task, instance))
+
+    def _instance_channels(self, task: str, instance: int):
+        outgoing = [c for c in self.channels if c.producer == (task, instance)]
+        incoming = [c for c in self.channels if c.consumer == (task, instance)]
+        return incoming, outgoing
+
+    def begin_restart(self, task: str, instance: int, error: BaseException,
+                      vol: Any = None) -> RestartEvent:
+        """Quarantine the dead incarnation and open the next epoch.
+
+        Outgoing channels drop un-acked queued payloads (the restarted
+        producer regenerates them from its checkpoint; in-flight prefetch
+        futures are cancelled) and rewind their serve/flow-control counters
+        to the last ack.  Incoming channels requeue delivered-but-unacked
+        payloads for replay and rewind the dedup watermark.  Producers
+        blocked in ``offer()`` are woken by the queue surgery and
+        re-rendezvous against the new epoch."""
+        with self._lock:
+            key = (task, instance)
+            self._attempt[key] = self._attempt.get(key, 0) + 1
+            self._epoch[key] = self._epoch.get(key, 0) + 1
+            attempt = self._attempt[key] - 1
+            epoch = self._epoch[key]
+            self._state[key] = TaskState.RESTARTING
+        incoming, outgoing = self._instance_channels(task, instance)
+        for ch in outgoing:
+            ch.quarantine_producer(epoch)
+        for ch in incoming:
+            ch.quarantine_consumer(epoch)
+        if vol is not None:
+            vol.reset_for_restart()
+        ev = RestartEvent(time.monotonic(), task, instance, attempt, epoch,
+                          f"{type(error).__name__}: {error}")
+        with self._lock:
+            self.restarts.append(ev)
+        return ev
+
+    def drop(self, task: str, instance: int) -> None:
+        """Degrade the instance's edges to no-ops (optional analysis task)."""
+        incoming, outgoing = self._instance_channels(task, instance)
+        for ch in outgoing:
+            ch.finish()          # consumers see producer-done, exit cleanly
+        for ch in incoming:
+            ch.abandon_consumer()  # producers' offers become counted drops
+        with self._lock:
+            self._state[(task, instance)] = TaskState.DROPPED
+            self.dropped.append((task, instance))
+
+    def poison(self, task: str, instance: int, error: BaseException) -> None:
+        """Permanent failure: wake every coupled peer with the bad news.
+
+        Consumers blocked in ``get()`` on the dead producer's channels raise
+        a chained ``ChannelError`` naming the task; producers blocked in
+        ``offer()`` toward the dead consumer are released (their serves
+        become counted drops) so the run winds down instead of hanging to
+        the join deadline."""
+        incoming, outgoing = self._instance_channels(task, instance)
+        for ch in outgoing:
+            ch.poison(task, instance, error)
+        for ch in incoming:
+            ch.abandon_consumer()
+        with self._lock:
+            self._state[(task, instance)] = TaskState.FAILED
+
+    # ------------------------------------------------------------ snapshot
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "restarts": [e.as_dict() for e in self.restarts],
+                "dropped": list(self.dropped),
+                "states": {f"{t}[{i}]": s
+                           for (t, i), s in sorted(self._state.items())},
+                "faults_fired": self.faults.fired() if self.faults else 0,
+            }

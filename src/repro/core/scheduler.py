@@ -462,6 +462,10 @@ class TelemetryTimeline:
         self._lock = threading.Lock()
         self._samples: Deque[Dict[str, Any]] = deque(maxlen=capacity or None)
         self.dropped = 0
+        # discrete lifecycle events (task restarts/drops) -- unlike the
+        # sampled rows these are rare and never truncated, so a Gantt
+        # consumer can always place every recovery on the timeline
+        self._events: List[Dict[str, Any]] = []
 
     @property
     def enabled(self) -> bool:
@@ -500,6 +504,22 @@ class TelemetryTimeline:
                 self._samples.append(row)
         return len(rows)
 
+    def record_event(self, kind: str, t: Optional[float] = None,
+                     **detail: Any) -> None:
+        """Append one discrete lifecycle event (``kind`` plus free-form
+        detail, e.g. a task restart with task/instance/attempt/epoch).
+        Recorded even when sampling is disabled (capacity 0): recovery
+        events must never be invisible."""
+        row = {"t": time.monotonic() if t is None else t, "kind": kind}
+        row.update(detail)
+        with self._lock:
+            self._events.append(row)
+
+    def events(self, kind: Optional[str] = None) -> List[Dict[str, Any]]:
+        with self._lock:
+            evs = list(self._events)
+        return evs if kind is None else [e for e in evs if e["kind"] == kind]
+
     def samples(self) -> List[Dict[str, Any]]:
         with self._lock:
             return list(self._samples)
@@ -524,6 +544,7 @@ class TelemetryTimeline:
                 "fields": list(SAMPLE_FIELDS),
                 "samples": [[row[f] for f in SAMPLE_FIELDS]
                             for row in self._samples],
+                "events": list(self._events),
             }
         return json.dumps(payload, sort_keys=True)
 
@@ -541,6 +562,7 @@ class TelemetryTimeline:
         tl.dropped = int(doc.get("dropped", 0))
         for values in doc.get("samples", []):
             tl._samples.append(dict(zip(fields, values)))
+        tl._events = [dict(e) for e in doc.get("events", [])]
         return tl
 
     @classmethod
@@ -572,6 +594,7 @@ class SchedulerRuntime:
         self._tick_lock = threading.Lock()
         self._steps = 0
         self._ticks = 0
+        self._restarts = 0
         self._step_sources: Dict[str, int] = {}
         self._closed = False
 
@@ -593,6 +616,21 @@ class SchedulerRuntime:
             due = (self._steps % self.config.tick_every) == 0
         if due:
             self.tick()
+
+    def notify_restart(self, task: str, instance: int, attempt: int,
+                       epoch: int, reason: str) -> None:
+        """A task instance is restarting: land it on the telemetry timeline
+        (visible to Gantt consumers) and count it.  Drops and permanent
+        failures arrive through the same door with their own kind."""
+        with self._lock:
+            if self._closed:
+                return
+            self._restarts += 1
+        self.timeline.record_event("restart", task=task, instance=instance,
+                                   attempt=attempt, epoch=epoch, reason=reason)
+        # an immediate sample brackets the recovery window in the ring
+        with self._tick_lock:
+            self.timeline.sample(self.channels)
 
     def tick(self) -> None:
         # Serialized: step events fire from many producer/consumer threads,
@@ -628,4 +666,6 @@ class SchedulerRuntime:
                        if getattr(ch, "prefetch", 0)},
             "telemetry_samples": len(self.timeline),
             "telemetry_dropped": self.timeline.dropped,
+            "restarts": self._restarts,
+            "restart_events": self.timeline.events("restart"),
         }

@@ -86,8 +86,13 @@ class VOL:
         # and consumer intercepted opens are the step events that drive the
         # depth-autotuner / telemetry tick (see scheduler.SchedulerRuntime)
         self.scheduler = None
+        # per-run supervisor (driver-attached): fault-injection points fire
+        # through it, and served files are stamped with the incarnation's
+        # epoch (``wilkins_epoch`` attr) at close
+        self.supervisor = None
 
         self.file_close_counter = 0
+        self.file_open_counter = 0
         self.dataset_write_counter = 0
         self._unserved: List[File] = []
         self._broadcast_log: List[str] = []
@@ -208,6 +213,15 @@ class VOL:
         self._open_files[f.filename] = f
 
     def on_file_close(self, f: File) -> None:
+        sup = self.supervisor  # local: the driver may detach it concurrently
+        if sup is not None:
+            # fault point "close": the producer crashes AT the step boundary,
+            # before this step's data is served -- the canonical lost-step
+            # (step is 0-based: the close about to complete)
+            sup.fire(self.task, self.instance, "close", self.file_close_counter)
+            # stamp the incarnation's epoch so consumers (and the recovery
+            # tests) can tell which incarnation produced a payload
+            f.attrs["wilkins_epoch"] = sup.epoch(self.task, self.instance)
         self._stamp_ownership(f)
         self._fire("before_file_close", f)
         self.file_close_counter += 1
@@ -233,6 +247,11 @@ class VOL:
         handshake (token taken *before* the scan) makes a serve that lands
         between scan and wait impossible to miss.
         """
+        sup = self.supervisor  # local: the driver may detach it concurrently
+        if sup is not None:
+            # fault point "open": the consumer crashes before asking for
+            # data (nothing delivered yet -- restart re-opens cleanly)
+            sup.fire(self.task, self.instance, "open", self.file_open_counter)
         self._fire("before_file_open", filename)
         chans = [c for c in self.incoming if c.matches_file(filename)]
         if not chans:
@@ -258,6 +277,14 @@ class VOL:
                         # sibling consumer could otherwise lose the update
                         with c._lock:
                             c.stats.consumer_wait_s += time.monotonic() - t0
+                        step = self.file_open_counter
+                        self.file_open_counter += 1
+                        if sup is not None:
+                            # fault point "recv": the payload WAS delivered
+                            # (the channel's watermark moved, the replay
+                            # buffer recorded it) but the task never saw it
+                            # -- the window only the replay protocol covers
+                            sup.fire(self.task, self.instance, "recv", step)
                         self._fire("after_file_open", r)
                         sched = self.scheduler  # local: driver may detach it
                         if sched is not None:
@@ -277,6 +304,19 @@ class VOL:
 
     def on_dataset_open(self, path: str) -> None:
         self._fire("before_dataset_open", path)
+
+    # ------------------------------------------------------------- restart
+    def reset_for_restart(self) -> None:
+        """Fresh-incarnation reset: drop the dead incarnation's unserved
+        files and open handles, restart the step counters.  Channel-side
+        state (serve seqs, flow-control counters) is rewound separately by
+        ``Channel.quarantine_producer`` -- the two never disagree because
+        the supervisor calls both under the restart barrier."""
+        self._unserved.clear()
+        self._open_files.clear()
+        self.file_close_counter = 0
+        self.file_open_counter = 0
+        self.dataset_write_counter = 0
 
     # ------------------------------------------------------------- shutdown
     def finalize(self) -> None:

@@ -96,34 +96,52 @@ class AsyncCheckpointer:
         os.makedirs(directory, exist_ok=True)
         self._lock = threading.Lock()
         self._inflight: Optional[threading.Thread] = None
+        # a failed background write (disk full, permission flip) used to die
+        # silently on its daemon thread -- callers kept "checkpointing" into
+        # the void.  The error is parked here and re-raised at the next
+        # save()/wait(), i.e. on the caller's thread, where the recovery
+        # supervisor can see it.
+        self._error: Optional[BaseException] = None
         self.saved_steps: List[int] = []
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state: Any, block: bool = False) -> None:
         host_state = jax.tree.map(np.asarray, state)  # D2H snapshot (blocking)
-        self.wait()  # at most one in-flight write
+        self.wait()  # at most one in-flight write (raises a parked error)
 
         def work():
-            path = os.path.join(self.dir, _ckpt_name(step))
-            save_pytree(host_state, path)
-            with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
-                f.write(str(step))
-            os.replace(os.path.join(self.dir, "LATEST.tmp"),
-                       os.path.join(self.dir, "LATEST"))
-            with self._lock:
-                self.saved_steps.append(step)
-                self._gc()
+            try:
+                path = os.path.join(self.dir, _ckpt_name(step))
+                save_pytree(host_state, path)
+                with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+                    f.write(str(step))
+                os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                           os.path.join(self.dir, "LATEST"))
+                with self._lock:
+                    self.saved_steps.append(step)
+                    self._gc()
+            except BaseException as e:  # surfaced on the caller's next call
+                with self._lock:
+                    self._error = e
 
         t = threading.Thread(target=work, daemon=True)
+        with self._lock:
+            self._inflight = t
         t.start()
-        self._inflight = t
         if block:
             self.wait()
 
     def wait(self) -> None:
-        if self._inflight is not None:
-            self._inflight.join()
-            self._inflight = None
+        """Join the in-flight write; re-raise any background write error on
+        THIS thread (a checkpoint that did not land must not ack)."""
+        with self._lock:
+            t, self._inflight = self._inflight, None
+        if t is not None:
+            t.join()
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise err
 
     def _gc(self) -> None:
         for s in sorted(self.saved_steps)[: -self.keep]:

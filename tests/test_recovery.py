@@ -1,0 +1,832 @@
+"""Fault-tolerant execution tests: supervision, checkpointed restart with
+replay, poison pills, prep-error auditing, and the deterministic
+fault-injection sweep.
+
+The core acceptance property throughout: a workflow crashed at ANY step
+boundary (or mid-prefetch) under ``on_failure: restart`` produces results
+byte-identical to the crash-free run -- restarts are invisible to the data.
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (Channel, ChannelError, FailurePolicy, FaultPlan,
+                        FaultSpec, InjectedFault, PrefetchPool,
+                        RecoveryContext, TelemetryTimeline, Wilkins, h5,
+                        reshard_blocks, world)
+from repro.core.datamodel import File
+from repro.train.checkpoint import AsyncCheckpointer
+
+STEPS = 4
+N = 32
+
+
+def _a(t):
+    return np.arange(N, dtype=np.float64) + 100.0 * t
+
+
+def _b(t):
+    return 2.0 * np.arange(N, dtype=np.float64) + 1000.0 * t
+
+
+#: expected crash-free results (pure functions of step -> closed form)
+EXPECTED_C1 = sum(_a(t) for t in range(STEPS))
+EXPECTED_C2 = sum(_a(t) + 3.0 * _b(t) for t in range(STEPS))
+
+
+# 2 producers x 2 consumers, all under managed restart: p1 -> a.h5 fans out
+# to BOTH consumers; p2 -> b.h5 feeds only c2 (so c2 exercises fan-in).
+RECOVERY_YAML = """
+tasks:
+  - func: p1
+    on_failure:
+      restart: {max_retries: 3}
+    outports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+  - func: p2
+    on_failure:
+      restart: {max_retries: 3}
+    outports:
+      - filename: b.h5
+        dsets:
+          - {name: /h, memory: 1}
+  - func: c1
+    on_failure:
+      restart: {max_retries: 3}
+    inports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+  - func: c2
+    on_failure:
+      restart: {max_retries: 3}
+    inports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+      - filename: b.h5
+        dsets:
+          - {name: /h, memory: 1}
+"""
+
+
+def _make_producer(filename, dset, gen):
+    """Checkpoint-every-step producer: a restart resumes at the next step."""
+
+    def produce(comm):
+        start = 0
+        r = comm.restore({"step": np.zeros((), np.int64)})
+        if r is not None:
+            start = int(r[1]["step"])
+        for t in range(start, STEPS):
+            with h5.File(filename, "w") as f:
+                f.create_dataset(dset, data=gen(t))
+            comm.checkpoint({"step": np.array(t + 1, np.int64)})
+
+    return produce
+
+
+def _make_consumer(results, key, primary, extras=()):
+    """Stateful accumulator consumer with per-step checkpoints.
+
+    ``primary`` is (filename, dset, weight) and drives loop termination;
+    ``extras`` are further (filename, dset, weight) inports read in lockstep.
+    Records the final accumulator, the step count, and the producer epochs
+    observed (the ``wilkins_epoch`` attr stamped at serve time).
+    """
+
+    def consume(comm):
+        like = {"acc": np.zeros(N, np.float64), "n": np.zeros((), np.int64)}
+        state = like
+        r = comm.restore(like)
+        if r is not None:
+            state = r[1]
+        epochs = []
+        while True:
+            f0 = h5.File(primary[0], "r")
+            if f0 is None:
+                break
+            epochs.append(int(f0.attrs.get("wilkins_epoch", -1)))
+            acc = state["acc"] + primary[2] * f0[primary[1]][...]
+            for fname, dset, w in extras:
+                fx = h5.File(fname, "r")
+                if fx is not None:
+                    acc = acc + w * fx[dset][...]
+            state = {"acc": acc, "n": state["n"] + np.int64(1)}
+            comm.checkpoint(state)
+        results[key] = (np.asarray(state["acc"]).copy(), int(state["n"]),
+                        epochs)
+
+    return consume
+
+
+def _recovery_workflow(tmp_path, tag):
+    results = {}
+    funcs = {
+        "p1": _make_producer("a.h5", "/g", _a),
+        "p2": _make_producer("b.h5", "/h", _b),
+        "c1": _make_consumer(results, "c1", ("a.h5", "/g", 1.0)),
+        "c2": _make_consumer(results, "c2", ("a.h5", "/g", 1.0),
+                             extras=(("b.h5", "/h", 3.0),)),
+    }
+    w = Wilkins(RECOVERY_YAML, funcs, spill_dir=str(tmp_path / tag))
+    return w, results
+
+
+def _assert_byte_identical(results):
+    acc1, n1, _ = results["c1"]
+    acc2, n2, _ = results["c2"]
+    assert n1 == STEPS and n2 == STEPS
+    np.testing.assert_array_equal(acc1, EXPECTED_C1)
+    np.testing.assert_array_equal(acc2, EXPECTED_C2)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: crash -> restart -> byte-identical output
+# ---------------------------------------------------------------------------
+def test_crash_free_run_matches_reference(tmp_path):
+    w, results = _recovery_workflow(tmp_path, "ref")
+    rep = w.run(timeout=60)
+    _assert_byte_identical(results)
+    assert rep.restarts == []
+    assert rep.dropped_tasks == []
+    assert rep.scheduler["recovery"]["restarts"] == []
+    # managed-restart policies are wired, so every serve carries epoch 0
+    assert set(results["c1"][2]) == {0}
+
+
+def test_consumer_crash_recovers_byte_identical(tmp_path):
+    """The acceptance criterion: an injected consumer crash in the
+    delivered-but-unseen window recovers under ``on_failure: restart`` with
+    byte-identical output, and the restart is visible everywhere it should
+    be (report, telemetry timeline, summary, scheduler snapshot)."""
+    w, results = _recovery_workflow(tmp_path, "ccrash")
+    rep = w.run(timeout=60,
+                faults=FaultSpec(task="c1", point="recv", step=1))
+    _assert_byte_identical(results)
+
+    assert len(rep.restarts) == 1
+    ev = rep.restarts[0]
+    assert ev["task"] == "c1" and ev["attempt"] == 0 and ev["epoch"] == 1
+    assert "InjectedFault" in ev["reason"]
+    # the payload was delivered before the crash, so the restarted
+    # incarnation must get it again from the replay buffer
+    assert sum(c.stats.replayed for c in rep.channels) >= 1
+    # visibility: telemetry timeline, summary(), scheduler snapshot
+    tl_events = rep.timeline.events("restart")
+    assert len(tl_events) == 1 and tl_events[0]["task"] == "c1"
+    assert "RESTART c1[0]" in rep.summary()
+    assert "recovery:" in rep.summary()
+    rec = rep.scheduler["recovery"]
+    assert len(rec["restarts"]) == 1
+    assert rec["states"]["c1[0]"] == "DONE"
+    assert rec["faults_fired"] == 1
+    assert rep.scheduler["restarts"] == 1
+
+
+def test_producer_crash_recovers_byte_identical(tmp_path):
+    w, results = _recovery_workflow(tmp_path, "pcrash")
+    rep = w.run(timeout=60,
+                faults=FaultSpec(task="p1", point="close", step=1))
+    _assert_byte_identical(results)
+    assert [r["task"] for r in rep.restarts] == ["p1"]
+    # steps produced after the restart carry the new incarnation's epoch
+    assert 1 in results["c1"][2]
+
+
+def test_multi_fault_run_recovers(tmp_path):
+    """A producer and a consumer both crash in one run; still byte-identical."""
+    w, results = _recovery_workflow(tmp_path, "multi")
+    rep = w.run(timeout=60, faults=[
+        FaultSpec(task="p2", point="close", step=2),
+        FaultSpec(task="c2", point="recv", step=3),
+    ])
+    _assert_byte_identical(results)
+    assert sorted(r["task"] for r in rep.restarts) == ["c2", "p2"]
+
+
+def test_stall_fault_does_not_restart(tmp_path):
+    """stall/slow_io faults delay but never crash: no restarts, same bytes."""
+    w, results = _recovery_workflow(tmp_path, "stall")
+    rep = w.run(timeout=60, faults=[
+        FaultSpec(task="p1", kind="stall", point="close", step=1,
+                  seconds=0.05),
+        FaultSpec(task="c1", kind="slow_io", point="recv", step=0,
+                  seconds=0.05),
+    ])
+    _assert_byte_identical(results)
+    assert rep.restarts == []
+    assert rep.scheduler["recovery"]["faults_fired"] == 2
+
+
+# ---------------------------------------------------------------------------
+# the deterministic fault-injection sweep (satellite: every task, every
+# step boundary, plus the delivered-but-unseen window)
+# ---------------------------------------------------------------------------
+def _sweep_cases():
+    cases = []
+    for t in ("p1", "p2", "c1", "c2"):
+        cases.append((t, "start", 0))
+    for t in ("p1", "p2"):
+        for s in range(STEPS):
+            cases.append((t, "close", s))
+    for pt in ("open", "recv"):
+        for s in range(STEPS):
+            cases.append(("c1", pt, s))
+        # c2 opens two files per loop iteration, so its open/recv step
+        # counter runs 0..2*STEPS-1 (even = a.h5, odd = b.h5)
+        for s in range(2 * STEPS):
+            cases.append(("c2", pt, s))
+    return cases
+
+
+SWEEP = _sweep_cases()
+#: fast representative subset: first/last step boundary per task, both the
+#: pre-delivery (open) and post-delivery (recv) windows, and a mid-stream b.h5
+FAST_SWEEP = [
+    ("p1", "close", 0), ("p2", "close", STEPS - 1),
+    ("c1", "open", 2), ("c1", "recv", STEPS - 1),
+    ("c2", "recv", 3), ("c2", "open", 5),
+]
+
+
+def _run_sweep_case(tmp_path, task, point, step):
+    w, results = _recovery_workflow(tmp_path, f"{task}_{point}_{step}")
+    rep = w.run(timeout=60,
+                faults=FaultSpec(task=task, point=point, step=step))
+    assert rep.scheduler["recovery"]["faults_fired"] == 1, \
+        f"fault {task}/{point}/{step} never fired"
+    assert [r["task"] for r in rep.restarts] == [task]
+    _assert_byte_identical(results)
+
+
+@pytest.mark.parametrize("task,point,step", FAST_SWEEP)
+def test_fault_sweep_representative(tmp_path, task, point, step):
+    _run_sweep_case(tmp_path, task, point, step)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("task,point,step", SWEEP)
+def test_fault_sweep_exhaustive(tmp_path, task, point, step):
+    """Crash every task at every step boundary; output is always identical."""
+    _run_sweep_case(tmp_path, task, point, step)
+
+
+def test_mid_prefetch_crash_recovers_via_prep_retry(tmp_path):
+    """A crash inside the async payload prep surfaces in the future; with a
+    fault plan active the delivery path re-runs the (idempotent) prep
+    synchronously -- no restart, no lost step, nothing in prefetch_errors."""
+    yaml_text = """
+tasks:
+  - func: p1
+    outports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+  - func: c1
+    inports:
+      - filename: a.h5
+        prefetch: 2
+        queue_depth: 2
+        dsets:
+          - {name: /g, memory: 1}
+"""
+    results = {}
+    funcs = {
+        "p1": _make_producer("a.h5", "/g", _a),
+        "c1": _make_consumer(results, "c1", ("a.h5", "/g", 1.0)),
+    }
+    w = Wilkins(yaml_text, funcs, spill_dir=str(tmp_path / "prep"))
+    rep = w.run(timeout=60,
+                faults=FaultSpec(task="p1", point="prefetch", step=1))
+    acc, n, _ = results["c1"]
+    assert n == STEPS
+    np.testing.assert_array_equal(acc, EXPECTED_C1)
+    assert sum(c.stats.prep_retries for c in rep.channels) == 1
+    assert rep.restarts == []
+    assert rep.prefetch_errors == []  # observed + retried, not dropped
+    assert "prep_retries=1" in rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# poison pill (satellite: consumer blocked on a dead producer)
+# ---------------------------------------------------------------------------
+def _channel(tmp_path, **kw):
+    kw.setdefault("mode", "memory")
+    return Channel("p[0]->c[0]:x.h5", ("p", 0), ("c", 0), "x.h5", ["*"],
+                   spill_dir=str(tmp_path), **kw)
+
+
+def _file(step=0):
+    f = File("x.h5")
+    f.create_dataset("/g", data=_a(step))
+    return f
+
+
+def test_poison_wakes_blocked_get_immediately(tmp_path):
+    """A consumer blocked in ``get()`` learns of the producer's death NOW,
+    with the dead task named and the real error chained -- not an opaque
+    ``ChannelTimeout`` thirty seconds later."""
+    ch = _channel(tmp_path)
+    out = {}
+
+    def blocked_consumer():
+        t0 = time.monotonic()
+        try:
+            ch.get(timeout=30.0)
+        except BaseException as e:
+            out["err"] = e
+        out["elapsed"] = time.monotonic() - t0
+
+    th = threading.Thread(target=blocked_consumer)
+    th.start()
+    time.sleep(0.2)  # let it block
+    cause = RuntimeError("simulation diverged")
+    ch.poison("sim", 3, cause)
+    th.join(timeout=10)
+    assert not th.is_alive()
+    err = out["err"]
+    assert isinstance(err, ChannelError)
+    assert err.task == "sim" and err.instance == 3
+    assert "sim" in str(err) and "simulation diverged" in str(err)
+    assert err.__cause__ is cause
+    assert out["elapsed"] < 10.0  # woke on poison, not on the timeout
+
+
+def test_poison_delivers_queued_data_first(tmp_path):
+    ch = _channel(tmp_path, queue_depth=2)
+    assert ch.offer(_file(0))
+    ch.poison("sim", 0, RuntimeError("late failure"))
+    f = ch.get(timeout=5)  # pre-failure data still delivers
+    np.testing.assert_array_equal(f["/g"][...], _a(0))
+    with pytest.raises(ChannelError):
+        ch.get(timeout=5)
+    with pytest.raises(ChannelError):
+        ch.try_get()
+    assert ch.is_done()  # terminal: the driver stops relaunching consumers
+
+
+def test_workflow_poison_names_dead_producer(tmp_path):
+    """End-to-end satellite: producer dies mid-run under the default
+    ``on_failure: fail``; the blocked consumer (in the ChannelMux wait path)
+    raises a chained ChannelError naming the producer, and the run fails
+    fast instead of riding out its timeout."""
+    yaml_text = """
+tasks:
+  - func: bad
+    outports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+  - func: victim
+    inports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+"""
+    seen = []
+
+    def bad():
+        with h5.File("a.h5", "w") as f:
+            f.create_dataset("/g", data=_a(0))
+        raise ValueError("disk on fire")
+
+    def victim():
+        while True:
+            f = h5.File("a.h5", "r")
+            if f is None:
+                break
+            seen.append(int(f["/g"][0]))
+
+    w = Wilkins(yaml_text, {"bad": bad, "victim": victim},
+                spill_dir=str(tmp_path / "poison"))
+    t0 = time.monotonic()
+    with pytest.raises(Exception) as ei:
+        w.run(timeout=60)
+    assert time.monotonic() - t0 < 30.0  # failed fast, not at the deadline
+
+    chain, e = [], ei.value
+    while e is not None:
+        chain.append(e)
+        e = e.__context__
+    assert any(isinstance(e, ValueError) and "disk on fire" in str(e)
+               for e in chain)
+    poisons = [e for e in chain if isinstance(e, ChannelError)]
+    assert poisons and poisons[0].task == "bad"
+    assert poisons[0].__cause__ is not None
+    rep = ei.value.report
+    assert {f.task for f in rep.failures} == {"bad", "victim"}
+    assert seen == [0]  # pre-failure data was still delivered
+
+
+# ---------------------------------------------------------------------------
+# prefetch-pool error audit (satellite: shutdown race never eats errors)
+# ---------------------------------------------------------------------------
+def test_prep_error_after_shutdown_is_drained():
+    pool = PrefetchPool(max_workers=1)
+    started, release = threading.Event(), threading.Event()
+
+    def doomed_prep():
+        started.set()
+        release.wait(10)
+        raise RuntimeError("prep exploded after teardown")
+
+    fut = pool.submit(doomed_prep, edge="p[0]->c[0]:a.h5")
+    assert started.wait(5)
+    pool.shutdown(cancel_pending=True)  # prep is RUNNING: cannot be cancelled
+    release.set()  # now it errors, with nobody left to call fut.result()
+    errs = pool.drain_errors(timeout=10)
+    assert len(errs) == 1
+    edge, exc = errs[0]
+    assert edge == "p[0]->c[0]:a.h5"
+    assert isinstance(exc, RuntimeError) and "prep exploded" in str(exc)
+    assert fut.exception() is not None
+    assert pool.drain_errors(timeout=1) == []  # reported exactly once
+
+
+def test_drain_skips_cancelled_and_observed_preps():
+    pool = PrefetchPool(max_workers=1)
+    gate = threading.Event()
+
+    def blocker():
+        gate.wait(10)
+        raise RuntimeError("observed by the consumer")
+
+    def never_runs():  # pragma: no cover - cancelled before starting
+        raise AssertionError("queued prep must be cancelled at shutdown")
+
+    f1 = pool.submit(blocker, edge="e1")
+    time.sleep(0.1)  # worker claims f1; f2 stays queued
+    f2 = pool.submit(never_runs, edge="e2")
+    pool.shutdown(cancel_pending=True)
+    gate.set()
+    # consumer DID see f1's error (the delivery path marks it observed)
+    while not f1.done():
+        time.sleep(0.01)
+    f1._wilkins_observed = True
+    assert f2.cancelled()
+    assert pool.drain_errors(timeout=10) == []
+
+
+# ---------------------------------------------------------------------------
+# channel-level recovery protocol units (dedup / replay / ack watermarks)
+# ---------------------------------------------------------------------------
+def test_offer_dedups_restarted_producer_serves(tmp_path):
+    """A restarted producer rewound past the consumer's delivery watermark
+    regenerates serves the consumer already holds: recognized and skipped
+    (exactly-once), while genuinely new steps still flow."""
+    ch = _channel(tmp_path)
+    assert ch.offer(_file(0))
+    f = ch.get(timeout=5)
+    np.testing.assert_array_equal(f["/g"][...], _a(0))
+    # producer dies with nothing acked: rewind to serve_seq 0
+    ch.quarantine_producer(epoch=1)
+    assert ch.epoch == 1
+    # restarted producer regenerates step 0 -> duplicate, swallowed
+    assert ch.offer(_file(0)) is True
+    assert ch.stats.deduped == 1
+    assert not ch.peek_pending()
+    # ...and produces step 1 -> genuinely new, delivered
+    assert ch.offer(_file(1))
+    np.testing.assert_array_equal(ch.get(timeout=5)["/g"][...], _a(1))
+
+
+def test_quarantine_consumer_replays_unacked_deliveries(tmp_path):
+    ch = _channel(tmp_path)
+    ch.set_replay(True)
+    assert ch.offer(_file(0))
+    np.testing.assert_array_equal(ch.get(timeout=5)["/g"][...], _a(0))
+    # consumer dies before checkpointing: the delivery must replay
+    ch.quarantine_consumer(epoch=1)
+    assert ch.stats.replayed == 1
+    np.testing.assert_array_equal(ch.get(timeout=5)["/g"][...], _a(0))
+    # checkpoint acks it; a second quarantine replays nothing
+    ch.ack_consumer()
+    ch.quarantine_consumer(epoch=2)
+    assert ch.stats.replayed == 1
+    assert not ch.peek_pending()
+
+
+def test_quarantine_producer_keeps_acked_queued_payloads(tmp_path):
+    ch = _channel(tmp_path, queue_depth=4)
+    assert ch.offer(_file(0))
+    ch.ack_producer()  # step 0 is durable (producer checkpointed)
+    assert ch.offer(_file(1))  # step 1 is not
+    ch.quarantine_producer(epoch=1)
+    # acked payload survives the quarantine, un-acked one is dropped
+    np.testing.assert_array_equal(ch.get(timeout=5)["/g"][...], _a(0))
+    assert not ch.peek_pending()
+    assert ch.stats.dropped == 1
+    # the restarted producer re-serves step 1 under the new epoch
+    assert ch.offer(_file(1))
+    np.testing.assert_array_equal(ch.get(timeout=5)["/g"][...], _a(1))
+
+
+def test_abandon_consumer_turns_offers_into_drops(tmp_path):
+    ch = _channel(tmp_path)
+    assert ch.offer(_file(0))
+    ch.abandon_consumer()
+    assert ch.offer(_file(1)) is False  # no block, no queue growth
+    assert ch.stats.dropped >= 2  # the queued payload + the new serve
+    assert not ch.peek_pending()
+
+
+# ---------------------------------------------------------------------------
+# policies: drop, exhaustion, legacy compatibility
+# ---------------------------------------------------------------------------
+DROP_YAML = """
+tasks:
+  - func: p1
+    outports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+  - func: cmain
+    inports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+  - func: copt
+    on_failure: drop
+    inports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+"""
+
+
+def test_drop_policy_degrades_optional_task_to_noop(tmp_path):
+    """An optional analysis task under ``on_failure: drop`` dies; the rest
+    of the workflow runs to completion, the producer's serves toward the
+    dead task become counted drops, and the outcome is visible."""
+    results = {}
+    funcs = {
+        "p1": _make_producer("a.h5", "/g", _a),
+        "cmain": _make_consumer(results, "cmain", ("a.h5", "/g", 1.0)),
+        "copt": _make_consumer(results, "copt", ("a.h5", "/g", 1.0)),
+    }
+    w = Wilkins(DROP_YAML, funcs, spill_dir=str(tmp_path / "drop"))
+    rep = w.run(timeout=60,
+                faults=FaultSpec(task="copt", point="open", step=1))
+    acc, n, _ = results["cmain"]
+    assert n == STEPS
+    np.testing.assert_array_equal(acc, EXPECTED_C1)
+    assert "copt" not in results  # never finished -- degraded to a no-op
+    assert rep.dropped_tasks == [("copt", 0)]
+    assert rep.restarts == []
+    assert len(rep.failures) == 1 and rep.failures[0].task == "copt"
+    assert "DROPPED copt[0]" in rep.summary()
+    assert rep.timeline.events("drop")[0]["task"] == "copt"
+    assert rep.scheduler["recovery"]["states"]["copt[0]"] == "DROPPED"
+
+
+def test_max_retries_exhaustion_chains_all_errors(tmp_path):
+    """A task that crashes on every incarnation exhausts its budget; the run
+    fails with EVERY attempt's error reachable on the __context__ chain and
+    the partial report attached (PR 3 semantics preserved)."""
+    yaml_text = """
+tasks:
+  - func: p1
+    outports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+  - func: c1
+    on_failure:
+      restart: {max_retries: 1}
+    inports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+"""
+    results = {}
+    funcs = {
+        "p1": _make_producer("a.h5", "/g", _a),
+        "c1": _make_consumer(results, "c1", ("a.h5", "/g", 1.0)),
+    }
+    w = Wilkins(yaml_text, funcs, spill_dir=str(tmp_path / "exh"))
+    with pytest.raises(InjectedFault) as ei:
+        # attempt=None, times=None: crash EVERY incarnation at open
+        w.run(timeout=60, faults=FaultSpec(task="c1", point="open", step=0,
+                                           attempt=None, times=None))
+    rep = ei.value.report
+    # both incarnations failed and both are on the report
+    assert [(f.task, f.attempt) for f in rep.failures] == \
+        [("c1", 0), ("c1", 1)]
+    # the one restart that was granted is recorded before exhaustion
+    assert len(rep.restarts) == 1
+    assert rep.scheduler["recovery"]["states"]["c1[0]"] == "FAILED"
+    # the producer was not left hanging toward the dead consumer
+    assert ("p1", 0) in rep.task_times
+
+
+def test_legacy_max_restarts_stays_unmanaged(tmp_path):
+    """``Wilkins(max_restarts=N)`` with no YAML ``on_failure`` keeps the
+    pre-recovery in-place relaunch: no RestartEvents, no epochs, no
+    channel surgery -- and the flaky task still completes."""
+    yaml_text = """
+tasks:
+  - func: flaky
+    outports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+  - func: c1
+    inports:
+      - filename: a.h5
+        dsets:
+          - {name: /g, memory: 1}
+"""
+    attempts = {"n": 0}
+    got = []
+
+    def flaky():
+        attempts["n"] += 1
+        if attempts["n"] == 1:
+            raise RuntimeError("transient")
+        for t in range(2):
+            with h5.File("a.h5", "w") as f:
+                f.create_dataset("/g", data=_a(t))
+
+    def c1():
+        while True:
+            f = h5.File("a.h5", "r")
+            if f is None:
+                break
+            got.append(int(f["/g"][0]))
+
+    w = Wilkins(yaml_text, {"flaky": flaky, "c1": c1}, max_restarts=2,
+                spill_dir=str(tmp_path / "legacy"))
+    rep = w.run(timeout=60)
+    assert attempts["n"] == 2
+    assert got == [0, 100]
+    assert rep.restarts == []  # unmanaged: no recovery protocol engaged
+    assert len(rep.failures) == 1
+    # no supervisor attached -> served files carry no epoch stamp
+    assert rep.scheduler["recovery"]["restarts"] == []
+
+
+# ---------------------------------------------------------------------------
+# policy / fault-spec parsing
+# ---------------------------------------------------------------------------
+def test_failure_policy_parses_all_spellings():
+    assert FailurePolicy.from_yaml(None).kind == "fail"
+    assert FailurePolicy.from_yaml("fail").kind == "fail"
+    assert FailurePolicy.from_yaml("drop").kind == "drop"
+    p = FailurePolicy.from_yaml("restart")
+    assert p.kind == "restart" and p.max_retries == 1 and p.managed
+    p = FailurePolicy.from_yaml(
+        {"restart": {"max_retries": 5, "backoff_s": 0.25, "jitter": 0.1}},
+        task="sim")
+    assert (p.kind, p.max_retries, p.backoff_s, p.jitter) == \
+        ("restart", 5, 0.25, 0.1)
+
+
+@pytest.mark.parametrize("doc", [
+    "explode",
+    {"retry": {"max_retries": 2}},
+    {"restart": "yes"},
+    {"restart": {"max_retries": 0}},
+    {"restart": {"backoff_s": -1}},
+    {"restart": {"jitter": -0.5}},
+    {"restart": {"bogus": 1}},
+    17,
+])
+def test_failure_policy_rejects_bad_yaml_naming_the_task(doc):
+    with pytest.raises(ValueError, match="task 'sim'"):
+        FailurePolicy.from_yaml(doc, task="sim")
+
+
+def test_backoff_is_deterministic_and_exponential():
+    p = FailurePolicy(kind="restart", max_retries=3, backoff_s=0.1,
+                      jitter=0.05)
+    assert p.backoff("t", 0, 1) == p.backoff("t", 0, 1)  # no RNG
+    assert p.backoff("t", 0, 2) > p.backoff("t", 0, 1) > p.backoff("t", 0, 0)
+    assert FailurePolicy().backoff("t", 0, 5) == 0.0
+
+
+def test_fault_spec_validation_and_coercion():
+    with pytest.raises(ValueError, match="kind"):
+        FaultSpec(task="t", kind="explode")
+    with pytest.raises(ValueError, match="point"):
+        FaultSpec(task="t", point="nowhere")
+    with pytest.raises(ValueError, match="times"):
+        FaultSpec(task="t", times=0)
+    with pytest.raises(ValueError, match="seconds"):
+        FaultSpec(task="t", seconds=-1.0)
+    assert FaultPlan.coerce(None) is None
+    plan = FaultPlan.coerce(FaultSpec(task="t"))
+    assert isinstance(plan, FaultPlan) and len(plan.specs) == 1
+    assert FaultPlan.coerce(plan) is plan
+    plan2 = FaultPlan.coerce([{"task": "t", "point": "open", "step": 2}])
+    assert plan2.specs[0].step == 2
+    # invalid YAML on_failure reaches Wilkins construction as a clear error
+    with pytest.raises(ValueError, match="task 'x'"):
+        Wilkins("tasks:\n  - func: x\n    on_failure: explode\n",
+                {"x": lambda: None})
+
+
+def test_fault_plan_times_budget():
+    plan = FaultPlan([FaultSpec(task="t", point="open", step=None,
+                                attempt=None, times=2)])
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            plan.fire("t", 0, "open", 0, 0)
+    plan.fire("t", 0, "open", 0, 0)  # budget exhausted: no longer fires
+    assert plan.fired() == 2
+    assert len(plan.log) == 2
+
+
+# ---------------------------------------------------------------------------
+# checkpoint surface: TaskComm, RecoveryContext, reshard replay
+# ---------------------------------------------------------------------------
+def test_checkpoint_restore_are_noops_standalone():
+    comm = world()
+    assert comm.recovery is None
+    assert comm.checkpoint({"x": np.arange(3)}) is None
+    assert comm.restore({"x": np.zeros(3)}) is None
+    assert comm.attempt == 0 and comm.epoch == 0
+
+
+def test_recovery_context_checkpoint_acks_and_restores(tmp_path):
+    class FakeCh:
+        def __init__(self):
+            self.producer_acks = 0
+            self.consumer_acks = 0
+
+        def ack_producer(self):
+            self.producer_acks += 1
+
+        def ack_consumer(self):
+            self.consumer_acks += 1
+
+    cin, cout = FakeCh(), FakeCh()
+    rc = RecoveryContext("sim", 0, str(tmp_path / "ck"),
+                         incoming=[cin], outgoing=[cout])
+    assert rc.restore({"x": np.zeros(4)}) is None  # fresh start
+    assert rc.checkpoint({"x": np.arange(4.0)}) == 0
+    assert rc.checkpoint({"x": np.arange(4.0) * 2}) == 1
+    assert cout.producer_acks == 2 and cin.consumer_acks == 2
+
+    # a NEW incarnation (fresh context over the same directory) restores
+    rc2 = RecoveryContext("sim", 0, str(tmp_path / "ck"))
+    step, state = rc2.restore({"x": np.zeros(4)})
+    assert step == 1
+    np.testing.assert_array_equal(state["x"], np.arange(4.0) * 2)
+    assert rc2.checkpoint({"x": np.zeros(4)}) == 2  # resumes the step count
+
+
+def test_reshard_blocks_m_to_n():
+    """State checkpointed by M ranks restores onto N ranks through the plan
+    cache -- the concatenation is invariant, the splits are the even N-way
+    decomposition."""
+    g = np.arange(36, dtype=np.float64).reshape(12, 3)
+    blocks3 = np.array_split(g, 3, axis=0)
+    out2 = reshard_blocks(blocks3, 2)
+    assert len(out2) == 2
+    np.testing.assert_array_equal(np.concatenate(out2, axis=0), g)
+    out5 = reshard_blocks(out2, 5)
+    np.testing.assert_array_equal(np.concatenate(out5, axis=0), g)
+    # non-zero axis
+    outc = reshard_blocks(np.array_split(g, 3, axis=1), 2, axis=1)
+    np.testing.assert_array_equal(np.concatenate(outc, axis=1), g)
+    with pytest.raises(ValueError, match="at least one"):
+        reshard_blocks([], 2)
+    with pytest.raises(ValueError, match="new_nranks"):
+        reshard_blocks(blocks3, 0)
+    with pytest.raises(ValueError, match="axis"):
+        reshard_blocks(blocks3, 2, axis=7)
+
+
+def test_async_checkpointer_surfaces_background_write_errors(tmp_path):
+    ck = AsyncCheckpointer(str(tmp_path / "ok"))
+    ck.dir = str(tmp_path / "missing" / "deeper")  # writes now fail
+    ck.save(0, {"x": np.arange(3)})
+    with pytest.raises(FileNotFoundError):
+        ck.wait()
+    # the parked error is cleared once raised; recovery is possible
+    ck.dir = str(tmp_path / "ok")
+    ck.save(1, {"x": np.arange(3)}, block=True)
+    assert ck.latest_step() == 1
+    # block=True re-raises synchronously on the caller
+    ck.dir = str(tmp_path / "missing" / "deeper")
+    with pytest.raises(FileNotFoundError):
+        ck.save(2, {"x": np.arange(3)}, block=True)
+
+
+def test_timeline_events_survive_json_roundtrip():
+    tl = TelemetryTimeline(capacity=0)  # sampling off; events still record
+    tl.record_event("restart", task="sim", instance=0, attempt=0, epoch=1,
+                    reason="InjectedFault: boom")
+    tl.record_event("drop", task="viz", instance=1)
+    assert len(tl.events()) == 2
+    assert tl.events("restart")[0]["epoch"] == 1
+    tl2 = TelemetryTimeline.from_json(tl.to_json())
+    assert tl2.events("restart") == tl.events("restart")
+    assert [e["kind"] for e in tl2.events()] == ["restart", "drop"]
