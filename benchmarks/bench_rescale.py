@@ -1,0 +1,186 @@
+"""Elastic-rescale benchmark: what does resizing a live task cost?
+
+A producer feeds an elastic two-instance consumer over a redistributing
+memory edge (32 MiB/step, 4 MiB at smoke sizes); each instance accumulates
+its slab and checkpoints it as a shard (``sharded_axes``).  Three runs:
+
+* **crash-free reference** at the original size -- the byte-exactness and
+  overhead baseline;
+* **same-size restart** -- the consumer crashes mid-stream under a plain
+  ``on_failure: restart`` policy: the recovery cost WITHOUT channel
+  surgery, the fair comparator for the rescale path;
+* **rescale** -- the same crash under ``rescale: {nslots: 1}``: supervised
+  M->N surgery (checkpoint re-cut, channel rebuild, replay) shrinking the
+  consumer 2->1.
+
+Measured:
+
+* **rescale latency** -- the surgery window itself, from the RescaleEvent
+  (``request_rescale`` to ``finish_rescale``: quiesce, re-cut, rebuild,
+  preload, relaunch);
+* **byte-exactness** -- the resized run's concatenated accumulator equals
+  the crash-free run's bit-for-bit (the tentpole's acceptance property);
+* **overhead vs the same-size restart** -- rescale wall time against
+  restart wall time: the surgery may cost the backoff + replay a restart
+  also pays, plus a bounded re-cut, not a rerun of the workflow.
+
+Writes ``BENCH_rescale.json`` and prints the usual CSV rows.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core import FaultSpec, Wilkins, h5, world
+from repro.core.redistribute import even_blocks
+
+from .common import Timer, emit, write_json
+
+MIB = 1 << 20
+
+
+def _yaml(policy: str) -> str:
+    return f"""
+tasks:
+  - func: producer
+    on_failure:
+      restart: {{max_retries: 2}}
+    outports:
+      - filename: state.h5
+        dsets:
+          - {{name: /grid, memory: 1}}
+  - func: consumer
+    taskCount: 2
+    on_failure:
+      {policy}
+    inports:
+      - filename: state.h5
+        redistribute: 1
+        dsets:
+          - {{name: /grid, memory: 1}}
+"""
+
+
+def _make_funcs(n_elems: int, steps: int, out: Dict[int, Any]):
+    """Slab-accumulating pair (uint64 math: exact at any partition)."""
+
+    def producer(comm):
+        start = 0
+        r = comm.restore({"step": np.zeros((), np.int64)})
+        if r is not None:
+            start = int(r[1]["step"])
+        for t in range(start, steps):
+            with h5.File("state.h5", "w") as f:
+                f.create_dataset(
+                    "/grid", data=np.arange(n_elems, dtype=np.uint64) + t)
+            comm.checkpoint({"step": np.array(t + 1, np.int64)})
+
+    def consumer():
+        comm = world()
+        spec = comm.resolve_redist_spec(port="state.h5")
+        _, (rows,) = even_blocks((n_elems,), spec.nslots)[spec.slot]
+        like = {"acc": np.zeros(rows, np.uint64),
+                "n": np.zeros((), np.int64)}
+        state = like
+        r = comm.restore(like)
+        if r is not None:
+            state = r[1]
+        acc = np.asarray(state["acc"]).copy()
+        n = int(state["n"])
+        while True:
+            f = h5.File("state.h5", "r")
+            if f is None:
+                break
+            acc = acc + f["/grid"][...]
+            n += 1
+            comm.checkpoint({"acc": acc, "n": np.array(n, np.int64)},
+                            sharded_axes={"acc": 0})
+        out[comm.instance] = (acc.copy(), n)
+
+    return {"producer": producer, "consumer": consumer}
+
+
+def _run(policy: str, n_elems: int, steps: int, faults=None):
+    out: Dict[int, Any] = {}
+    spill = tempfile.mkdtemp(prefix="wilkins_bench_rescale_")
+    try:
+        w = Wilkins(_yaml(policy), _make_funcs(n_elems, steps, out),
+                    spill_dir=spill, record_events=True)
+        with Timer() as t:
+            rep = w.run(timeout=600, faults=faults)
+    finally:
+        shutil.rmtree(spill, ignore_errors=True)
+    final = w.graph.tasks["consumer"].task_count
+    acc = np.concatenate([out[j][0] for j in range(final)])
+    assert all(out[j][1] == steps for j in range(final))
+    return acc, rep, t.dt, final
+
+
+def main(smoke: bool = False) -> Dict[str, Any]:
+    bytes_per_step = (4 if smoke else 32) * MIB
+    n_elems = bytes_per_step // 8  # uint64 grid
+    steps = 4 if smoke else 8
+    crash_step = steps // 2
+    crash = FaultSpec(task="consumer", point="recv", step=crash_step,
+                      instance=0)
+
+    ref_acc, ref_rep, ref_s, _ = _run(
+        "rescale: {nslots: 1, max_retries: 2}", n_elems, steps)
+    res_acc, res_rep, res_s, res_n = _run(
+        "rescale: {nslots: 1, max_retries: 2}", n_elems, steps, faults=crash)
+    rst_acc, rst_rep, rst_s, _ = _run(
+        "restart: {max_retries: 2}", n_elems, steps, faults=crash)
+
+    byte_exact = (res_acc.tobytes() == ref_acc.tobytes()
+                  and rst_acc.tobytes() == ref_acc.tobytes())
+    assert len(res_rep.rescales) == 1 and res_n == 1
+    ev = res_rep.rescales[0]
+    rescale_latency_s = ev["latency_s"]
+    steps_replayed = sum(c.stats.replayed for c in res_rep.channels)
+    overhead_vs_restart_x = res_s / max(rst_s, 1e-9)
+    # absolute slack on top of the ratio: at smoke sizes the whole run is
+    # ~100 ms, so a pure ratio gate would measure scheduler noise
+    overhead_ok = res_s <= 3.0 * rst_s + 1.0
+    latency_ok = rescale_latency_s <= (2.0 if smoke else 10.0)
+
+    emit("rescale_bytes_per_step", bytes_per_step, "B")
+    emit("rescale_crash_free_s", ref_s, "s", f"steps={steps} nslots=2")
+    emit("rescale_restart_s", rst_s, "s",
+         f"same-size restart crash@recv step={crash_step}")
+    emit("rescale_rescaled_s", res_s, "s",
+         f"2->1 surgery crash@recv step={crash_step}")
+    emit("rescale_latency_s", rescale_latency_s, "s",
+         "request_rescale -> finish_rescale")
+    emit("rescale_overhead_vs_restart", overhead_vs_restart_x, "x",
+         "rescaled/restarted")
+    emit("rescale_steps_replayed", steps_replayed, "steps")
+    emit("rescale_byte_exact", int(byte_exact), "bool")
+
+    results = {
+        "bytes_per_step": bytes_per_step,
+        "steps": steps,
+        "crash_step": crash_step,
+        "old_nslots": ev["old_nslots"],
+        "new_nslots": ev["new_nslots"],
+        "crash_free_s": ref_s,
+        "restart_s": rst_s,
+        "rescaled_s": res_s,
+        "rescale_latency_s": rescale_latency_s,
+        "latency_ok": latency_ok,
+        "overhead_vs_restart_x": overhead_vs_restart_x,
+        "overhead_ok": overhead_ok,
+        "steps_replayed": int(steps_replayed),
+        "rescales": len(res_rep.rescales),
+        "rescales_crash_free": len(ref_rep.rescales),
+        "byte_exact": bool(byte_exact),
+    }
+    write_json("rescale", results)
+    return results
+
+
+if __name__ == "__main__":
+    main()

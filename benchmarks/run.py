@@ -12,6 +12,9 @@
                   fast path, Pallas pack executor)
   recovery     -> fault-tolerant execution (mid-run crash, checkpointed
                   restart, replay; byte-exact recovery + latency/overhead)
+  rescale      -> elastic M->N rescale (supervised shrink mid-run: checkpoint
+                  re-cut, channel rebuild, replay; byte-exact + surgery
+                  latency + overhead vs a same-size restart)
   roofline     -> §Roofline table from the dry-run grid (not a paper artifact)
 
 ``--smoke`` is the tier-1 entry point: it runs the pytest suite, a small
@@ -20,8 +23,9 @@ fails if any fails (gates: fan-out copy reduction >= 2x, M->N bytes-shipped
 reduction >= 2x, plan-cache hit rate >= 0.9, zero aligned-path copies,
 prefetch overlap >= 0.30, a byte-exact 3-D reshard on the flattened
 pack-kernel path, the autotuned disparate-rate run's consumer blocked_s at
-or below the static-depth baseline, a telemetry JSON round trip, and a
-byte-exact mid-run crash recovery with bounded overhead).
+or below the static-depth baseline, a telemetry JSON round trip, a
+byte-exact mid-run crash recovery with bounded overhead, and a byte-exact
+elastic 2->1 rescale with bounded surgery latency).
 ``WILKINS_SMOKE_SKIP_PYTEST=1`` skips the pytest stage (CI runs the suite
 as its own fast/slow job steps).
 
@@ -40,7 +44,7 @@ import time
 import traceback
 
 SUITES = ("overhead", "flowcontrol", "ensembles", "nucleation", "cosmo",
-          "transport", "redistribute", "recovery", "roofline")
+          "transport", "redistribute", "recovery", "rescale", "roofline")
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -106,19 +110,32 @@ def _smoke() -> int:
           f"restarts={rec['restarts']} replayed={rec['steps_replayed']} "
           f"latency={rec['recovery_latency_s']:.3f}s "
           f"overhead={rec['overhead_x']:.2f}x ====", flush=True)
+    print("==== smoke: bench_rescale ====", flush=True)
+    from . import bench_rescale
+    rsc = bench_rescale.main(smoke=True)
+    print(f"==== smoke: rescale byte_exact={rsc['byte_exact']} "
+          f"{rsc['old_nslots']}->{rsc['new_nslots']} "
+          f"replayed={rsc['steps_replayed']} "
+          f"latency={rsc['rescale_latency_s']:.3f}s "
+          f"overhead_vs_restart={rsc['overhead_vs_restart_x']:.2f}x ====",
+          flush=True)
     # gates: M->N shipped-bytes reduction, steady-state plan reuse, aligned
     # zero-copy, the reshard+prefetch pipeline hiding >= 30% of slab-serve
     # time behind consumer compute on the 4->2 edge, the 3-D reshard
     # staying on the flattened kernel path byte-exactly (no numpy fallback),
     # the autotuned disparate-rate run blocking its consumer no longer than
-    # the static-depth baseline, and the telemetry JSON round-tripping
+    # the static-depth baseline, the telemetry JSON round-tripping, and the
+    # elastic 2->1 rescale landing byte-exact with a bounded surgery window
     ok = (shipped >= 2.0 and hit_rate >= 0.9 and aligned_copied == 0
           and overlap >= 0.30
           and nd["pack_mode"] is not None and nd["byte_exact"]
           and sr["blocked_improved"] and sr["telemetry_roundtrip_ok"]
           and rec["byte_exact"] and rec["restarts"] == 1
           and rec["restarts_crash_free"] == 0
-          and rec["steps_replayed"] >= 1 and rec["overhead_ok"])
+          and rec["steps_replayed"] >= 1 and rec["overhead_ok"]
+          and rsc["byte_exact"] and rsc["rescales"] == 1
+          and rsc["rescales_crash_free"] == 0
+          and rsc["latency_ok"] and rsc["overhead_ok"])
     return 0 if ok else 1
 
 

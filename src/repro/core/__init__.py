@@ -14,8 +14,9 @@ from . import datamodel, h5, redistribute, scheduler
 from .channel import (Channel, ChannelError, ChannelMux, ChannelStats,
                       ChannelTimeout, FlowControl, NO_DATA, PrefetchPool)
 from .recovery import (FailurePolicy, FaultPlan, FaultSpec, InjectedFault,
-                       RecoveryContext, RunSupervisor, TaskState,
-                       reshard_blocks)
+                       RecoveryContext, RescaleError, RescaleEvent,
+                       RescaleInterrupt, RescaleOp, RunSupervisor, StallEvent,
+                       SupersededError, TaskState, edge_key, reshard_blocks)
 from .scheduler import (DepthAutotuner, FairPolicy, FifoPolicy,
                         ResizableSemaphore, SchedulerConfig, SchedulerRuntime,
                         TelemetryTimeline)
@@ -52,8 +53,15 @@ __all__ = [
     "FaultSpec",
     "InjectedFault",
     "RecoveryContext",
+    "RescaleError",
+    "RescaleEvent",
+    "RescaleInterrupt",
+    "RescaleOp",
     "RunSupervisor",
+    "StallEvent",
+    "SupersededError",
     "TaskState",
+    "edge_key",
     "reshard_blocks",
     "TaskComm",
     "world",

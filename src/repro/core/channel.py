@@ -474,6 +474,20 @@ class Channel:
         self._poison: Optional[Tuple[str, int, BaseException]] = None
         self._abandoned = False
         self._prep_retry = False
+        # --- elastic rescale state (see recovery.RescaleOp) --------------
+        # consumer interrupt: raised out of get/try_get to pull the consumer
+        # thread out of its callable so the task can be resized
+        self._interrupt: Optional[BaseException] = None
+        # producer grace: a retiring channel lets blocked offers complete
+        # immediately (ring may transiently exceed depth) so the feeding
+        # producer drains out of the rendezvous before the channel swap
+        self._grace = False
+        # retention ring: when the consumer's policy is a rescale, acked
+        # payloads move here (instead of being discarded) so the surgery can
+        # re-cut every step after the consistent cut, even for sibling
+        # instances that checkpointed ahead of it
+        self._retention = False
+        self._retained: Deque[Tuple[str, Any, int, int, Any]] = deque()
         self._supervisor: Optional[Any] = None  # RunSupervisor (fault hook)
         # Waiter accounting for the `latest` rendezvous decision: one entry
         # per *distinct consumer thread* currently blocked on this channel,
@@ -531,11 +545,32 @@ class Channel:
 
     def ack_consumer(self) -> None:
         """Consumer checkpointed: deliveries so far are consumed.  The
-        replay buffer empties; a later ``quarantine_consumer`` replays only
-        payloads delivered after this point."""
+        replay buffer empties (into the retention ring when a rescale may
+        need to re-cut consumed steps); a later ``quarantine_consumer``
+        replays only payloads delivered after this point."""
         with self._lock:
             self._acked_delivered_seq = self._delivered_seq
+            if self._retention and self._replay:
+                self._retained.extend(self._replay)
             self._replay.clear()
+
+    def set_retention(self, enabled: bool, cap: int = 512) -> None:
+        """Keep acked payloads in a bounded ring for rescale re-cutting.
+
+        Only enabled when the consumer's ``on_failure`` policy is a rescale:
+        a sibling instance may checkpoint (and ack) steps *past* the
+        consistent cut, and the surgery must still re-partition those steps
+        for the new instances.  The ring is CoW views, so retention holds
+        references, not copies."""
+        with self._lock:
+            self._retention = bool(enabled)
+            self._retained = deque(maxlen=int(cap)) if enabled else deque()
+
+    @property
+    def delivered_seq(self) -> int:
+        """Consumer-side delivery watermark (checkpoint sidecar feed)."""
+        with self._lock:
+            return self._delivered_seq
 
     def _discard_item_locked(self, item: Tuple[str, Any, int, int, Any]) -> None:
         """Drop one queued item (caller holds the lock): cancel an unfinished
@@ -616,6 +651,79 @@ class Channel:
                 self._discard_item_locked(item)
             self._queue.clear()
             self._event("consumer", "abandoned")
+            self._lock.notify_all()
+        self._notify_listeners()
+
+    # ------------------------------------------------------- elastic rescale
+    def interrupt_consumer(self, exc: BaseException) -> None:
+        """Pull the consumer out of this channel: the next (or currently
+        blocked) ``get``/``try_get`` raises ``exc`` instead of delivering.
+        Used by the rescale protocol to stop sibling instances at a step
+        boundary; not an error path -- queued data stays queued and is
+        re-cut for the new partition."""
+        with self._lock:
+            self._interrupt = exc
+            self._event("consumer", "interrupt")
+            self._lock.notify_all()
+        self._notify_listeners()
+
+    def rescale_release_producer(self) -> None:
+        """Retire-side grace: complete any blocked ``offer`` immediately
+        (the ring may transiently exceed ``queue_depth``) so the feeding
+        producer drains out of its rendezvous before the channel swap."""
+        with self._lock:
+            self._grace = True
+            self._event("producer", "rescale_grace")
+            self._lock.notify_all()
+        self._notify_listeners()
+
+    def rescale_snapshot(self) -> Dict[str, Any]:
+        """Counters + every step the surgery may need to re-cut: the
+        retention ring (acked), the replay buffer (delivered, unacked) and
+        the queue (undelivered).  Items may still be payload *futures*; the
+        caller resolves them outside this lock."""
+        with self._lock:
+            return {
+                "serve_seq": self._serve_seq,
+                "acked_seq": self._acked_seq,
+                "close_count": self._close_count,
+                "acked_close_count": self._acked_close_count,
+                "delivered_seq": self._delivered_seq,
+                "acked_delivered_seq": self._acked_delivered_seq,
+                "done": self._done,
+                "items": list(self._retained) + list(self._replay)
+                         + list(self._queue),
+            }
+
+    def rescale_adopt(self, *, serve_seq: int, acked_seq: int,
+                      close_count: int, acked_close_count: int, done: bool,
+                      epoch: int, delivered_floor: int) -> None:
+        """Initialize a freshly built channel as the continuation of a
+        retired edge at a new partition: producer-side counters carry over
+        verbatim (the producer's serve ordinals and flow-control phase must
+        not restart), the consumer-side watermark rewinds to the consistent
+        cut so the preloaded replay delivers, and the epoch is bumped past
+        every retired incarnation."""
+        with self._lock:
+            self._serve_seq = serve_seq
+            self._acked_seq = acked_seq
+            self._close_count = close_count
+            self._acked_close_count = acked_close_count
+            self._delivered_seq = delivered_floor
+            self._acked_delivered_seq = delivered_floor
+            self._done = bool(done)
+            self._epoch = max(self._epoch, epoch)
+            self._event("producer", f"rescale_adopt:epoch={epoch}")
+
+    def rescale_preload(self, payload: File, seq: int) -> None:
+        """Queue one re-partitioned replay payload on an adopted channel
+        (bypasses flow control: the seq was already assigned -- and any
+        some/latest skipping already applied -- on the retired edge)."""
+        with self._lock:
+            self._queue.append(("memory", payload, seq, self._epoch, None))
+            self.stats.replayed += 1
+            self.stats.served += 1
+            self._event("producer", "rescale_replay")
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -878,8 +986,15 @@ class Channel:
                 self._drop_stale_preps_locked()
             self._event("producer", "wait_begin")
             while (len(self._queue) >= self.queue_depth and not self._done
-                   and not self._abandoned):
-                self._lock.wait()
+                   and not self._abandoned and not self._grace):
+                if self._supervisor is not None:
+                    # a producer parked in the rendezvous is starved, not
+                    # stalled: keep its heartbeat alive for the watchdog
+                    self._supervisor.heartbeat(*self.producer)
+                    self._lock.wait(
+                        timeout=self._supervisor.wait_quantum(self.producer[0]))
+                else:
+                    self._lock.wait()
             self.stats.producer_wait_s += time.monotonic() - t0
             self._event("producer", "wait_end")
             if self._abandoned:
@@ -1108,17 +1223,29 @@ class Channel:
         t0 = time.monotonic()
         deadline = None if timeout is None else t0 + timeout
         with self._lock:
+            if self._interrupt is not None:
+                raise self._interrupt
             self._waiter_enter()
             try:
-                while not self._queue and not self._done and self._poison is None:
+                while (not self._queue and not self._done
+                       and self._poison is None and self._interrupt is None):
                     remaining = None if deadline is None else deadline - time.monotonic()
                     if remaining is not None and remaining <= 0:
                         self.stats.consumer_wait_s += time.monotonic() - t0
                         self._event("consumer", "timeout")
                         raise ChannelTimeout(
                             f"{self.name}: no data within {timeout}s")
+                    if self._supervisor is not None:
+                        # a consumer parked on an empty channel is starved,
+                        # not stalled: keep its heartbeat alive
+                        self._supervisor.heartbeat(*self.consumer)
+                        q = self._supervisor.wait_quantum(self.consumer[0])
+                        remaining = q if remaining is None else min(
+                            remaining, q)
                     self._lock.wait(timeout=remaining)
                 self.stats.consumer_wait_s += time.monotonic() - t0
+                if self._interrupt is not None:
+                    raise self._interrupt
                 if self._queue:
                     item = self._take()
                 elif self._poison is not None:
@@ -1147,6 +1274,8 @@ class Channel:
         ``ChannelError`` if the producer failed permanently (poison pill --
         also how ``ChannelMux`` scan loops learn of a dead producer)."""
         with self._lock:
+            if self._interrupt is not None:
+                raise self._interrupt
             if self._queue:
                 item = self._take()
             elif self._poison is not None:

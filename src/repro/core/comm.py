@@ -58,6 +58,9 @@ class TaskComm:
     # per-instance RecoveryContext (driver-wired when the run has a
     # supervisor): the checkpoint/restore surface below routes through it
     recovery: Any = None
+    # the RunSupervisor itself (driver-wired alongside ``recovery``): the
+    # programmatic rescale trigger below routes through it
+    supervisor: Any = None
 
     def is_io_proc(self, rank: Optional[int] = None) -> bool:
         r = self.rank if rank is None else rank
@@ -105,6 +108,9 @@ class TaskComm:
         its cadence.  No-op standalone (no workflow scheduler wired)."""
         if self.scheduler is not None:
             self.scheduler.notify_step("comm_step")
+        if self.supervisor is not None:
+            # an explicit step is proof of life for the stall watchdog too
+            self.supervisor.heartbeat(self.task, self.instance)
 
     # ------------------------------------------------- checkpoint / restore
     @property
@@ -119,7 +125,9 @@ class TaskComm:
         return self.recovery.epoch if self.recovery is not None else 0
 
     def checkpoint(self, state: Any, step: Optional[int] = None,
-                   block: bool = True) -> Optional[int]:
+                   block: bool = True,
+                   sharded_axes: Optional[Dict[str, int]] = None
+                   ) -> Optional[int]:
         """Snapshot ``state`` (any pytree) for crash recovery.
 
         Routed through the run's ``AsyncCheckpointer`` (atomic container +
@@ -129,11 +137,35 @@ class TaskComm:
         checkpoint step, or ``None`` standalone (no recovery wired) -- task
         code is identical in and out of a workflow.
 
+        ``sharded_axes`` maps top-level keys of a flat dict ``state`` to the
+        axis along which that leaf is this instance's shard of a global
+        array.  Required for tasks under an elastic ``rescale:`` policy: a
+        rescale re-cuts those leaves across the new instance count and
+        asserts every other leaf is replicated.
+
         ``block=True`` (default) makes the save durable before acking; see
         DESIGN.md for the cadence/overhead trade."""
         if self.recovery is None:
             return None
-        return self.recovery.checkpoint(state, step=step, block=block)
+        return self.recovery.checkpoint(state, step=step, block=block,
+                                        sharded_axes=sharded_axes)
+
+    def rescale(self, task: Optional[str] = None, *,
+                nslots: Optional[int] = None,
+                nprocs: Optional[int] = None,
+                reason: str = "") -> Any:
+        """Programmatic elastic-rescale trigger (``RunSupervisor.rescale``).
+
+        Requests that ``task`` (default: this task) be brought down and
+        relaunched at a different instance count (``nslots``) and/or logical
+        rank count (``nprocs``), replaying undelivered steps into the
+        re-partitioned consumers.  Returns the ``RescaleOp`` handle (its
+        ``done`` event fires when the surgery completes), or ``None``
+        standalone."""
+        if self.supervisor is None:
+            return None
+        return self.supervisor.rescale(task or self.task, nslots=nslots,
+                                       nprocs=nprocs, reason=reason)
 
     def restore(self, like: Any) -> Optional[Tuple[int, Any]]:
         """(step, state) from this instance's newest checkpoint, or ``None``

@@ -35,7 +35,8 @@ from .comm import TaskComm, pop_comm, push_comm
 from .datamodel import transport_stats
 from .graph import WorkflowGraph
 from .recovery import (FailurePolicy, FaultPlan, RecoveryContext,
-                       RunSupervisor, TaskState)
+                       RescaleEvent, RescaleInterrupt, RunSupervisor,
+                       StallEvent, SupersededError, TaskState)
 from .redistribute import RedistSpec, plan_cache
 from .scheduler import SchedulerRuntime, TelemetryTimeline
 from .vol import VOL, pop_vol, push_vol
@@ -88,6 +89,12 @@ class WorkflowReport:
     restarts: List[Dict[str, Any]] = field(default_factory=list)
     dropped_tasks: List[Tuple[str, int]] = field(default_factory=list)
     prefetch_errors: List[Tuple[Optional[str], str]] = field(default_factory=list)
+    # elastic rescale outcomes: one dict per RescaleEvent (old/new sizes,
+    # trigger, consistent-cut step, end-to-end surgery latency) and one per
+    # StallEvent the health watchdog declared (silent window vs timeout and
+    # the action the policy took)
+    rescales: List[Dict[str, Any]] = field(default_factory=list)
+    stalls: List[Dict[str, Any]] = field(default_factory=list)
 
     @property
     def total_bytes_moved(self) -> int:
@@ -148,11 +155,13 @@ class WorkflowReport:
         replayed = sum(c.stats.replayed for c in self.channels)
         deduped = sum(c.stats.deduped for c in self.channels)
         retries = sum(c.stats.prep_retries for c in self.channels)
-        if self.restarts or self.dropped_tasks or replayed or deduped or retries:
+        if (self.restarts or self.dropped_tasks or replayed or deduped
+                or retries or self.rescales or self.stalls):
             lines.append(
                 f"recovery: restarts={len(self.restarts)} "
                 f"dropped_tasks={len(self.dropped_tasks)} replayed={replayed} "
-                f"deduped={deduped} prep_retries={retries}")
+                f"deduped={deduped} prep_retries={retries} "
+                f"rescales={len(self.rescales)} stalls={len(self.stalls)}")
         for (task, inst), secs in sorted(self.task_times.items()):
             lines.append(
                 f"  {task}[{inst}]: {secs:.3f}s launches={self.task_launches.get((task, inst), 1)}"
@@ -165,6 +174,18 @@ class WorkflowReport:
                 f"{r['attempt']} -> epoch={r['epoch']}: {r['reason']}")
         for task, inst in self.dropped_tasks:
             lines.append(f"  DROPPED {task}[{inst}] (on_failure: drop)")
+        for r in self.rescales:
+            lines.append(
+                f"  RESCALE {r['task']}: nslots {r['old_nslots']}->"
+                f"{r['new_nslots']} nprocs {r['old_nprocs']}->"
+                f"{r['new_nprocs']} trigger={r['trigger']} "
+                f"cut_step={r['cut_step']} latency={r['latency_s']:.3f}s"
+                + (f" ({r['reason']})" if r.get("reason") else ""))
+        for s in self.stalls:
+            lines.append(
+                f"  STALL {s['task']}[{s['instance']}] "
+                f"silent={s['silent_s']:.2f}s timeout={s['timeout_s']}s "
+                f"-> {s['action']}")
         for edge, msg in self.prefetch_errors:
             lines.append(f"  PREFETCH-ERROR edge={edge}: {msg}")
         return "\n".join(lines)
@@ -247,6 +268,17 @@ class Wilkins:
         # ...and across Wilkins INSTANCES: two drivers sharing the default
         # per-pid spill dir must never restore each other's checkpoints
         self._driver_seq = _next_driver_seq()
+        # run-scoped elastic-rescale surfaces (set for the duration of
+        # ``run``): the supervisor/report/pool/checkpoint-root the surgery
+        # module reaches back into, plus the threads it spawns for the new
+        # instances (joined by ``run`` after the original cohort)
+        self._run_supervisor: Optional[RunSupervisor] = None
+        self._run_report: Optional[WorkflowReport] = None
+        self._run_pool: Optional[PrefetchPool] = None
+        self._ck_root = ""
+        self._extra_threads: List[threading.Thread] = []
+        self._extra_lock = threading.Lock()
+        self._spawn_extra: Optional[Callable[[str, int, int], None]] = None
         self._build()
 
     # ------------------------------------------------------------ resources
@@ -367,10 +399,11 @@ class Wilkins:
             devices=self.device_groups.get((name, inst)),
             redist_specs=specs,
             scheduler=self._sched_runtime,
+            supervisor=self._run_supervisor,
         )
 
     def _run_instance(self, name: str, inst: int, report: WorkflowReport,
-                      sup: RunSupervisor) -> None:
+                      sup: RunSupervisor, gen: int = 0) -> None:
         """Supervised task lifecycle: RUNNING -> (FAILED -> RESTARTING)* ->
         DONE | DROPPED, per the task's ``on_failure`` policy.
 
@@ -382,22 +415,30 @@ class Wilkins:
         re-rendezvouses cleanly and replays from its last checkpoint; the
         legacy unmanaged budget (``Wilkins(max_restarts=N)``) relaunches in
         place with no surgery, exactly as before.
-        """
-        t = self.graph.tasks[name]
-        vol = self.vols[(name, inst)]
-        fn = self.funcs[name]
-        policy = sup.policy_for(name)
-        rc = self._recovery_ctx.get((name, inst))
 
+        ``gen`` is the task generation this thread was spawned for: a
+        completed rescale bumps it, fencing every older thread -- a fenced
+        thread's failures and results are moot and it exits quietly.  The
+        VOL/channel/recovery tables are re-fetched every incarnation because
+        a rescale swaps the dict entries under this thread.
+        """
         t0 = time.monotonic()
         launches = 0
-        attempt = 0
+        vol: Optional[VOL] = None
+        attempt = sup.attempt(name, inst)
+        first = True
         try:
             while True:  # restart loop: one iteration per incarnation
+                t = self.graph.tasks[name]
+                vol = self.vols[(name, inst)]
+                fn = self.funcs[name]
+                policy = sup.policy_for(name)
+                rc = self._recovery_ctx.get((name, inst))
                 sup.mark(name, inst, TaskState.RUNNING)
-                if attempt == 0 and t.actions is not None:
+                if first and t.actions is not None:
                     action = actions_mod.load_action(t.actions, self.action_dirs)
                     action(vol, 0)
+                first = False
                 comm = self._make_comm(name, inst)
                 if rc is not None:
                     rc.attempt = attempt
@@ -430,12 +471,51 @@ class Wilkins:
                         ):
                             continue
                         break
+                except RescaleInterrupt:
+                    # not a failure: a pending resize pulled us out of the
+                    # callable.  Arrive at the op; the LAST arriver leads the
+                    # surgery, everyone else just retires.  A vanished op
+                    # means the surgery already sealed -- we're a zombie.
+                    op = sup.pending_rescale(name)
+                    if op is not None and sup.arrive(op, inst):
+                        sup.lead(op)
+                    return
+                except SupersededError:
+                    # fenced zombie (e.g. a stalled thread that woke after
+                    # its task was resized away from it): exit quietly
+                    return
                 except Exception as e:
+                    if sup.is_superseded(name, gen) or sup.is_fenced(name, inst):
+                        return  # a rescale retired this incarnation already
                     report.failures.append(
                         TaskFailure(name, inst, attempt,
                                     f"{type(e).__name__}: {e}")
                     )
                     sup.mark(name, inst, TaskState.FAILED)
+                    if policy.kind == "rescale" and attempt < policy.max_retries:
+                        cur = sup.task_counts.get(name, t.task_count)
+                        if policy.nslots is not None and policy.nslots != cur:
+                            # relaunch at a different instance count: full
+                            # channel surgery.  This crashed thread is fenced
+                            # out of the required set; it leads only when no
+                            # live sibling remains to arrive last.
+                            op, lead = sup.request_rescale(
+                                name, nslots=policy.nslots,
+                                nprocs=policy.nprocs, trigger="policy",
+                                reason=f"{type(e).__name__}: {e}",
+                                fence_instance=inst)
+                            if lead:
+                                sup.lead(op)
+                            return
+                        # nprocs-only: a managed restart that also moves the
+                        # logical rank count -- no topology change, no barrier
+                        self._apply_nprocs_rescale(name, inst, policy, e,
+                                                   vol, sup, report, attempt)
+                        delay = policy.backoff(name, inst, attempt)
+                        if delay > 0:
+                            time.sleep(delay)
+                        attempt += 1
+                        continue
                     if policy.kind == "restart" and attempt < policy.max_retries:
                         if policy.managed:
                             ev = sup.begin_restart(name, inst, e, vol=vol)
@@ -462,12 +542,98 @@ class Wilkins:
                                 reason=f"{type(e).__name__}: {e}")
                         return
                     raise  # fail (or retries exhausted): chain per PR 3
-                sup.mark(name, inst, TaskState.DONE)
+                op = sup.mark_done_or_join(name, inst)
+                if op is not None:
+                    # finished exactly as a rescale landed: the op still
+                    # needs this instance out of the way -- count the clean
+                    # exit as the arrival (and lead if we were the last)
+                    if sup.arrive(op, inst):
+                        sup.lead(op)
                 return
         finally:
-            vol.finalize()
+            if vol is not None:
+                vol.finalize()
             report.task_times[(name, inst)] = time.monotonic() - t0
             report.task_launches[(name, inst)] = launches
+
+    def _apply_nprocs_rescale(self, name: str, inst: int,
+                              policy: FailurePolicy, error: BaseException,
+                              vol: VOL, sup: RunSupervisor,
+                              report: WorkflowReport, attempt: int) -> None:
+        """``rescale: {nprocs: K}`` with no instance-count change: a managed
+        restart that also moves the task's logical rank count.
+
+        No barrier and no channel rebuild -- the topology is unchanged; only
+        the per-rank decompositions are re-pointed: the producer-side
+        declared ownership (``VOL._ownership``) and the consumer-side frozen
+        ``RedistSpec`` rank counts, on EVERY instance of the task.  Sibling
+        channels of one edge share a slot decomposition, so a per-instance
+        change would mix rank counts within one plan; the all-instance
+        change only re-subdivides future slabs' ownership maps -- the slab
+        bytes per slot are a function of ``nslots`` alone and do not move.
+        """
+        t = self.graph.tasks[name]
+        t1 = time.monotonic()
+        ev0 = sup.begin_restart(name, inst, error, vol=vol)
+        report.restarts.append(ev0.as_dict())
+        sched = self._sched_runtime
+        if sched is not None:
+            sched.notify_restart(name, inst, attempt, ev0.epoch, ev0.reason)
+        old_np = sup.task_nprocs.get(name, t.nprocs)
+        new_np = policy.nprocs
+        if new_np is None or new_np == old_np:
+            return
+        old_io = t.nwriters if t.nwriters is not None else old_np
+        new_io = t.nwriters if t.nwriters is not None else new_np
+        t.nprocs = new_np
+        for (tn, _i), v in self.vols.items():
+            if tn == name:
+                v.nprocs = new_np
+                v.io_procs = new_io
+                v.update_ownership_nranks(old_io, new_io)
+        for ch in self.channels:
+            if ch.consumer[0] == name and ch.redistribute is not None:
+                ch.redistribute = replace(ch.redistribute, nranks=new_io)
+        sup.task_nprocs[name] = new_np
+        rc = self._recovery_ctx.get((name, inst))
+        cut = rc.latest_step() if rc is not None else None
+        ev = RescaleEvent(time.monotonic(), name, t.task_count, t.task_count,
+                          old_np, new_np, "policy",
+                          cut if cut is not None else -1,
+                          time.monotonic() - t1,
+                          f"{type(error).__name__}: {error}")
+        sup.rescales.append(ev)
+        report.rescales.append(ev.as_dict())
+        if sched is not None:
+            sched.notify_rescale(name, t.task_count, t.task_count, old_np,
+                                 new_np, "policy", ev.cut_step, ev.latency_s,
+                                 ev.reason)
+
+    def _execute_rescale(self, op: Any) -> None:
+        """Surgery executor the supervisor's ``lead(op)`` dispatches to."""
+        from .rescale import execute_rescale
+        execute_rescale(self, op)
+
+    def _validate_rescale_request(self, task: str,
+                                  nslots: Optional[int] = None,
+                                  nprocs: Optional[int] = None) -> None:
+        """Validator for programmatic ``RunSupervisor.rescale`` / YAML-free
+        triggers: same structural rules the graph enforces at parse time for
+        declared ``on_failure: {rescale: ...}`` policies."""
+        if task not in self.graph.tasks:
+            raise ValueError(f"rescale: unknown task {task!r}")
+        if nslots is None and nprocs is None:
+            raise ValueError(
+                f"rescale {task!r}: nothing to change -- give nslots "
+                f"and/or nprocs")
+        if nslots is not None and int(nslots) < 1:
+            raise ValueError(
+                f"rescale {task!r}: nslots must be >= 1, got {nslots}")
+        if nprocs is not None and int(nprocs) < 1:
+            raise ValueError(
+                f"rescale {task!r}: nprocs must be >= 1, got {nprocs}")
+        if nslots is not None:
+            self.graph.validate_rescale_target(task)
 
     def run(self, timeout: Optional[float] = None,
             faults: Optional[Any] = None) -> WorkflowReport:
@@ -484,22 +650,57 @@ class Wilkins:
         errors: List[BaseException] = []
 
         # The run's supervisor: lifecycle states, epochs, fault firing, and
-        # the channel surgery for restart / drop / permanent failure.
-        sup = RunSupervisor(self.policies, self.channels,
-                            faults=FaultPlan.coerce(faults))
+        # the channel surgery for restart / drop / rescale / permanent
+        # failure.  It knows the live instance count per task (rescales move
+        # it) and the stall-watchdog windows; the driver installs itself as
+        # the surgery executor and rescale validator.
+        stall_timeouts = {name: t.stall_timeout_s
+                          for name, t in self.graph.tasks.items()
+                          if t.stall_timeout_s is not None}
+        sup = RunSupervisor(
+            self.policies, self.channels,
+            faults=FaultPlan.coerce(faults),
+            task_counts={name: t.task_count
+                         for name, t in self.graph.tasks.items()},
+            stall_timeouts=stall_timeouts)
+        sup.task_nprocs = {name: t.nprocs
+                           for name, t in self.graph.tasks.items()}
+        sup.on_rescale = self._execute_rescale
+        sup.validate_rescale = self._validate_rescale_request
+        self._run_supervisor = sup
+        self._run_report = report
+        self._extra_threads = []
+        extra_lock = self._extra_lock
 
-        def runner(name: str, inst: int) -> None:
+        def runner(name: str, inst: int, gen: int = 0) -> None:
             try:
-                self._run_instance(name, inst, report, sup)
+                self._run_instance(name, inst, report, sup, gen=gen)
             except BaseException as e:
+                if sup.is_superseded(name, gen):
+                    return  # a rescale retired this incarnation mid-failure
                 errors.append(e)
                 # poison our outgoing channels FIRST: consumers blocked in
                 # get() raise a ChannelError naming us instead of waiting
                 # out their timeout (finalize()'s producer-done races this,
                 # but get() checks poison before done, so the error wins)
                 sup.poison(name, inst, e)
-                # unblock everyone coupled to us
-                self.vols[(name, inst)].finalize()
+                # unblock everyone coupled to us (a shrink may have dropped
+                # this instance's VOL from the table -- nothing to unblock)
+                vol = self.vols.get((name, inst))
+                if vol is not None:
+                    vol.finalize()
+
+        def spawn_extra(name: str, inst: int, gen: int) -> None:
+            # fresh threads for a rescaled task's new instances; run() joins
+            # them after the original cohort (they may spawn more in turn)
+            th = threading.Thread(
+                target=runner, args=(name, inst, gen),
+                name=f"wilkins-{name}-{inst}-g{gen}", daemon=True)
+            with extra_lock:
+                self._extra_threads.append(th)
+            th.start()
+
+        self._spawn_extra = spawn_extra
 
         # Prefetch executor lifecycle is tied to THIS run: a fresh pool
         # sized to the run's total per-edge depth is injected into this
@@ -543,12 +744,19 @@ class Wilkins:
                 cpol = sup.policy_for(ch.consumer[0])
                 if cpol.kind == "restart" and cpol.managed:
                     ch.set_replay(True)
+                elif cpol.kind == "rescale":
+                    # a resize re-cuts steps the consumer may already have
+                    # checkpointed past: replay tracking plus the retention
+                    # ring (acked payloads) back the consistent-cut replay
+                    ch.set_replay(True)
+                    ch.set_retention(True)
         self._recovery_ctx = {}
         # per-run checkpoint root: a second run() of the same Wilkins must
         # start fresh, not restore the previous run's checkpoints
         self._run_seq += 1
         ck_root = os.path.join(
             self.spill_dir, f"ckpt_d{self._driver_seq}_run{self._run_seq}")
+        self._ck_root = ck_root  # rescale surgery re-cuts shards under here
         for (name, i), vol in self.vols.items():
             self._recovery_ctx[(name, i)] = RecoveryContext(
                 name, i, os.path.join(ck_root, f"{name}_{i}"),
@@ -561,6 +769,51 @@ class Wilkins:
                                 policy=sched.make_policy())
             for ch in self.channels:
                 ch.set_prefetch_pool(pool)
+        self._run_pool = pool
+        # Health watchdog: one daemon scanning heartbeats when any managed
+        # task declared ``stall_timeout_s``.  Stalls take the task's policy
+        # (rescale away from the fenced instance, or drop); the 2-strike
+        # hysteresis lives in ``sup.scan_stalls`` -- slow-but-progressing
+        # tasks heartbeat through channel waits and are never declared.
+        watchdog_stop = threading.Event()
+        watchdog_thread: Optional[threading.Thread] = None
+        if stall_timeouts and recovery_on:
+            wd_interval = max(0.05,
+                              min(1.0, min(stall_timeouts.values()) / 2.0))
+
+            def watchdog() -> None:
+                while not watchdog_stop.wait(wd_interval):
+                    for (task, i, silent, wd_timeout) in sup.scan_stalls():
+                        pol = sup.policy_for(task)
+                        action = "rescale" if pol.kind == "rescale" else "drop"
+                        sev = StallEvent(time.monotonic(), task, i, silent,
+                                         wd_timeout, action)
+                        sup.record_stall(sev)
+                        report.stalls.append(sev.as_dict())
+                        sched.notify_stall(task, i, silent, wd_timeout,
+                                           action)
+                        try:
+                            if pol.kind == "rescale":
+                                # resize away from the stalled instance; the
+                                # watchdog leads only when no live sibling
+                                # remains to arrive last
+                                op, lead = sup.request_rescale(
+                                    task, nslots=pol.nslots,
+                                    nprocs=pol.nprocs, trigger="stall",
+                                    reason=f"stalled {silent:.2f}s > "
+                                           f"{wd_timeout}s (instance {i})",
+                                    fence_instance=i)
+                                if lead:
+                                    sup.lead(op)
+                            else:  # drop
+                                sup.drop(task, i)
+                                report.dropped_tasks.append((task, i))
+                        except BaseException as e:
+                            errors.append(e)
+
+            watchdog_thread = threading.Thread(
+                target=watchdog, name="wilkins-watchdog", daemon=True)
+            watchdog_thread.start()
         t0 = time.monotonic()
         try:
             for name, t in self.graph.tasks.items():
@@ -582,6 +835,24 @@ class Wilkins:
                 th.join(timeout=remaining)
                 if th.is_alive():
                     hung.append(th.name)
+            # Drain the threads rescale surgeries spawned for new instances
+            # (a rescaled task may rescale again, spawning more -- loop to a
+            # fixed point) under the same global deadline.
+            joined: set = set()
+            while not hung:
+                with extra_lock:
+                    extra = [th for th in self._extra_threads
+                             if th not in joined]
+                if not extra:
+                    break
+                for th in extra:
+                    remaining = None
+                    if deadline is not None:
+                        remaining = max(0.0, deadline - time.monotonic())
+                    th.join(timeout=remaining)
+                    joined.add(th)
+                    if th.is_alive():
+                        hung.append(th.name)
             report.wall_time_s = time.monotonic() - t0
             # Tear the prefetch pool down HERE (not only in the finally) so
             # any prep exception the shutdown raced -- erroring on a worker
@@ -614,6 +885,9 @@ class Wilkins:
                 raise primary
             return report
         finally:
+            if watchdog_thread is not None:
+                watchdog_stop.set()
+                watchdog_thread.join(timeout=5.0)
             # scheduler teardown mirrors the pool's: close on success and
             # error paths alike, and always feed the report (the error paths
             # attach the partial report to the raised exception above, so
@@ -640,6 +914,11 @@ class Wilkins:
                     ch.set_supervisor(None)
                     ch.set_prep_retry(False)
                     ch.set_replay(False)
+                    ch.set_retention(False)
+            self._run_supervisor = None
+            self._run_report = None
+            self._run_pool = None
+            self._spawn_extra = None
 
 
 def _chain_errors(

@@ -98,9 +98,14 @@ class TaskSpec:
     inports: List[Port] = field(default_factory=list)
     outports: List[Port] = field(default_factory=list)
     # YAML ``on_failure:`` -- fail (default, today's chained-error behavior),
-    # restart: {max_retries, backoff_s, jitter}, or drop (optional task:
-    # edges degrade to no-ops).  See recovery.FailurePolicy.
+    # restart: {max_retries, backoff_s, jitter}, drop (optional task: edges
+    # degrade to no-ops), or rescale: {nslots, nprocs} (elastic relaunch at a
+    # different size).  See recovery.FailurePolicy.
     on_failure: FailurePolicy = field(default_factory=FailurePolicy)
+    # YAML ``stall_timeout_s:`` -- health-watchdog window: no heartbeat from
+    # an instance for this long (two consecutive scans: hysteresis) declares
+    # it stalled and applies the task's on_failure policy.  None = no watchdog.
+    stall_timeout_s: Optional[float] = None
     raw: Dict[str, Any] = field(default_factory=dict)
 
     @property
@@ -259,6 +264,18 @@ def _parse_task(t: Dict[str, Any]) -> TaskSpec:
         if not (isinstance(actions, (list, tuple)) and len(actions) == 2):
             raise ValueError(f"actions must be [script, function], got {actions!r}")
         actions = (str(actions[0]), str(actions[1]))
+    stall = t.get("stall_timeout_s")
+    if stall is not None:
+        try:
+            stall = float(stall)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"task {t['func']!r}: stall_timeout_s must be a number of "
+                f"seconds, got {t['stall_timeout_s']!r}") from None
+        if stall <= 0:
+            raise ValueError(
+                f"task {t['func']!r}: stall_timeout_s must be > 0, got "
+                f"{stall} (omit the key to disable the watchdog)")
     spec = TaskSpec(
         func=t["func"],
         nprocs=int(t.get("nprocs", 1)),
@@ -269,6 +286,7 @@ def _parse_task(t: Dict[str, Any]) -> TaskSpec:
         inports=[_parse_port(p, t["func"]) for p in t.get("inports", [])],
         outports=[_parse_port(p, t["func"]) for p in t.get("outports", [])],
         on_failure=FailurePolicy.from_yaml(t.get("on_failure"), t["func"]),
+        stall_timeout_s=stall,
         raw=dict(t),
     )
     for p in spec.inports:
@@ -305,6 +323,21 @@ def _parse_task(t: Dict[str, Any]) -> TaskSpec:
                 f"task {spec.func!r} outport {p.filename!r}: ownership nranks "
                 f"{p.own_nranks} matches neither nprocs={spec.nprocs} nor "
                 f"nwriters={spec.io_procs}")
+    if spec.stall_timeout_s is not None:
+        # The watchdog turns "no heartbeat" into a *policy application*; on
+        # an unmanaged task there is no policy to apply, and restart-on-stall
+        # is rejected too (a stalled-but-alive incarnation would keep serving
+        # into channels its restarted twin also serves -- rescale fences the
+        # old incarnation under a new generation, restart does not).
+        pol = spec.on_failure
+        managed = (pol.kind == "drop"
+                   or (pol.kind == "rescale" and pol.nslots is not None))
+        if not managed:
+            raise ValueError(
+                f"task {spec.func!r}: stall_timeout_s requires a managed "
+                f"on_failure policy that can fence the stalled incarnation "
+                f"-- rescale: {{nslots: N}} or drop: -- but the task "
+                f"declares {pol.kind!r}")
     return spec
 
 
@@ -319,6 +352,7 @@ class WorkflowGraph:
         self.tasks: Dict[str, TaskSpec] = {t.func: t for t in tasks}
         self.scheduler = scheduler if scheduler is not None else SchedulerConfig()
         self.edges: List[Edge] = self._match()
+        self._validate_rescale()
 
     # ------------------------------------------------------------- loading
     @classmethod
@@ -376,6 +410,75 @@ class WorkflowGraph:
                                 )
                             )
         return edges
+
+    # -------------------------------------------------- rescale validation
+    def _validate_rescale(self) -> None:
+        """Reject unsupportable elastic-rescale declarations at parse time.
+
+        A ``rescale: {nslots: N}`` relaunch re-partitions the task's inbound
+        channels and replays undelivered steps from the producers' retention
+        rings -- byte-identical replay is only well-defined when:
+
+        * the task is a pure consumer (no outports): re-cutting a producer's
+          instance count would re-pair every downstream edge's round-robin
+          ``instance_links`` mid-run;
+        * every feeding producer runs a single instance (``taskCount: 1``):
+          with multiple producer instances the modulo pairing changes which
+          producer feeds which consumer slot across sizes;
+        * every inbound edge uses memory transport (file-mode edges carry no
+          replayable payloads);
+        * no inbound edge uses ``io_freq: -1`` (latest-mode seq assignment
+          depends on live waiter timing, so the replay set is not
+          deterministic across sizes).
+
+        ``rescale: {nprocs: K}`` alone (no nslots) changes only the logical
+        rank count and carries none of these restrictions.
+        """
+        for name, t in self.tasks.items():
+            pol = t.on_failure
+            if pol.kind != "rescale" or pol.nslots is None:
+                continue
+            self.validate_rescale_target(name)
+
+    def validate_rescale_target(self, name: str) -> None:
+        """Structural rules for resizing ``name``'s instance count; used at
+        parse time for declared policies and again by the driver for
+        programmatic ``RunSupervisor.rescale(task, nslots=...)`` triggers
+        (which have no YAML to validate)."""
+        t = self.tasks[name]
+        if t.outports:
+            raise ValueError(
+                f"task {name!r}: rescale: {{nslots: ...}} requires a "
+                f"pure consumer (no outports) -- resizing a producer "
+                f"would re-pair every downstream edge's round-robin "
+                f"instance links mid-run; use rescale: {{nprocs: ...}} "
+                f"to resize a producer's logical ranks instead")
+        inbound = self.producers_of(name)
+        if not inbound:
+            raise ValueError(
+                f"task {name!r}: rescale: {{nslots: ...}} declared but "
+                f"no inport edge matched -- an isolated task has no "
+                f"channels to re-partition")
+        for e in inbound:
+            if self.tasks[e.producer].task_count != 1:
+                raise ValueError(
+                    f"task {name!r}: rescale: {{nslots: ...}} requires "
+                    f"every feeding producer to run a single instance, "
+                    f"but {e.producer!r} has taskCount="
+                    f"{self.tasks[e.producer].task_count}")
+            if e.mode != "memory":
+                raise ValueError(
+                    f"task {name!r}: rescale: {{nslots: ...}} requires "
+                    f"memory transport on every inbound edge, but the "
+                    f"edge from {e.producer!r} ({e.filename_pattern!r}) "
+                    f"uses file mode")
+            if e.io_freq == -1:
+                raise ValueError(
+                    f"task {name!r}: rescale: {{nslots: ...}} cannot "
+                    f"combine with io_freq: -1 (latest) on the edge from "
+                    f"{e.producer!r} -- latest-mode step selection "
+                    f"depends on live consumer timing, so the replay "
+                    f"set is not deterministic across sizes")
 
     # ----------------------------------------------------------- utilities
     def producers_of(self, task: str) -> List[Edge]:

@@ -53,6 +53,9 @@ Nothing here imports driver/graph/channel -- channels and vols are duck-typed
 from __future__ import annotations
 
 import hashlib
+import json
+import os
+import re
 import threading
 import time
 from dataclasses import dataclass, field
@@ -67,8 +70,15 @@ __all__ = [
     "FAULT_POINTS",
     "TaskState",
     "RestartEvent",
+    "RescaleEvent",
+    "StallEvent",
+    "RescaleInterrupt",
+    "RescaleError",
+    "SupersededError",
+    "RescaleOp",
     "RecoveryContext",
     "RunSupervisor",
+    "edge_key",
     "reshard_blocks",
 ]
 
@@ -76,7 +86,7 @@ __all__ = [
 # ---------------------------------------------------------------------------
 # failure policy (YAML `on_failure:` per task)
 # ---------------------------------------------------------------------------
-POLICY_KINDS = ("fail", "restart", "drop")
+POLICY_KINDS = ("fail", "restart", "drop", "rescale")
 
 
 @dataclass(frozen=True)
@@ -94,6 +104,10 @@ class FailurePolicy:
     backoff_s: float = 0.0
     jitter: float = 0.0
     managed: bool = True
+    # rescale-only knobs: the instance count / logical rank count the task
+    # restarts at.  None = keep the current value.
+    nslots: Optional[int] = None
+    nprocs: Optional[int] = None
 
     def backoff(self, task: str, instance: int, attempt: int) -> float:
         """Exponential backoff with DETERMINISTIC jitter.
@@ -135,12 +149,24 @@ class FailurePolicy:
                 f"task {task!r}: on_failure {doc!r} is invalid; use one of "
                 f"{POLICY_KINDS} (or a restart: mapping)")
         if isinstance(doc, dict):
-            unknown = set(doc) - {"restart"}
+            if "rescale" in doc and "drop" in doc:
+                raise ValueError(
+                    f"task {task!r}: on_failure cannot combine rescale: with "
+                    f"drop: -- a dropped task has no instances left to "
+                    f"restart at a new size; pick one")
+            unknown = set(doc) - {"restart", "rescale"}
             if unknown:
                 raise ValueError(
                     f"task {task!r}: unknown on_failure keys "
-                    f"{sorted(unknown)} (expected a restart: mapping, or the "
-                    f"strings fail/drop/restart)")
+                    f"{sorted(unknown)} (expected a restart: or rescale: "
+                    f"mapping, or the strings fail/drop/restart)")
+            if "restart" in doc and "rescale" in doc:
+                raise ValueError(
+                    f"task {task!r}: on_failure cannot combine restart: and "
+                    f"rescale:; a rescale IS a supervised restart (use "
+                    f"rescale with the current size for a same-size restart)")
+            if "rescale" in doc:
+                return cls._parse_rescale(doc["rescale"], task)
             r = doc.get("restart")
             if r is None:
                 raise ValueError(
@@ -176,6 +202,57 @@ class FailurePolicy:
         raise ValueError(
             f"task {task!r}: on_failure must be fail/drop/restart or a "
             f"restart: mapping, got {doc!r}")
+
+    @classmethod
+    def _parse_rescale(cls, r: Any, task: str) -> "FailurePolicy":
+        """Parse ``on_failure: {rescale: {nslots, nprocs, ...}}``."""
+        if not isinstance(r, dict):
+            raise ValueError(
+                f"task {task!r}: on_failure rescale must be a mapping "
+                f"{{nslots, nprocs, max_retries, backoff_s, jitter}}, "
+                f"got {r!r}")
+        bad = set(r) - {"nslots", "nprocs", "max_retries", "backoff_s",
+                        "jitter"}
+        if bad:
+            raise ValueError(
+                f"task {task!r}: unknown on_failure rescale keys "
+                f"{sorted(bad)} (expected nslots, nprocs, max_retries, "
+                f"backoff_s, jitter)")
+        nslots = r.get("nslots")
+        nprocs = r.get("nprocs")
+        if nslots is None and nprocs is None:
+            raise ValueError(
+                f"task {task!r}: on_failure rescale needs nslots and/or "
+                f"nprocs (the size the task restarts at)")
+        if nslots is not None:
+            nslots = int(nslots)
+            if nslots < 1:
+                raise ValueError(
+                    f"task {task!r}: on_failure rescale nslots must be >= 1, "
+                    f"got {nslots} (use on_failure: drop to remove the task)")
+        if nprocs is not None:
+            nprocs = int(nprocs)
+            if nprocs < 1:
+                raise ValueError(
+                    f"task {task!r}: on_failure rescale nprocs must be >= 1, "
+                    f"got {nprocs}")
+        retries = int(r.get("max_retries", 1))
+        if retries < 1:
+            raise ValueError(
+                f"task {task!r}: on_failure rescale max_retries must be >= 1, "
+                f"got {retries}")
+        backoff = float(r.get("backoff_s", 0.0))
+        if backoff < 0:
+            raise ValueError(
+                f"task {task!r}: on_failure rescale backoff_s must be >= 0, "
+                f"got {backoff}")
+        jitter = float(r.get("jitter", 0.0))
+        if jitter < 0:
+            raise ValueError(
+                f"task {task!r}: on_failure rescale jitter must be >= 0, "
+                f"got {jitter}")
+        return cls(kind="rescale", max_retries=retries, backoff_s=backoff,
+                   jitter=jitter, nslots=nslots, nprocs=nprocs)
 
 
 # ---------------------------------------------------------------------------
@@ -317,6 +394,111 @@ class RestartEvent:
 
 
 # ---------------------------------------------------------------------------
+# elastic rescale: events, interrupts, and the per-task rescale operation
+# ---------------------------------------------------------------------------
+class RescaleInterrupt(Exception):
+    """Raised out of a blocked/next channel operation to pull a sibling
+    instance out of its task callable so the task can be resized.  Not an
+    error: the driver converts it into op participation, never a failure."""
+
+    def __init__(self, task: str = "?", instance: int = -1):
+        super().__init__(f"rescale interrupt: {task}[{instance}]")
+        self.task = task
+        self.instance = instance
+
+
+class SupersededError(RuntimeError):
+    """Raised by a retired incarnation's checkpoint/channel surface after a
+    rescale replaced it -- a fenced zombie (e.g. a stalled thread that woke
+    up late) must exit quietly, not corrupt the new incarnation's state."""
+
+
+class RescaleError(RuntimeError):
+    """A rescale could not be performed safely (lost retention window,
+    inconsistent replicated state, missing checkpoint shard...)."""
+
+
+@dataclass
+class RescaleEvent:
+    t: float
+    task: str
+    old_nslots: int
+    new_nslots: int
+    old_nprocs: int
+    new_nprocs: int
+    trigger: str          # "policy" (crash), "stall" (watchdog), "api"
+    cut_step: int = -1    # checkpoint step the task restarted from (-1 fresh)
+    latency_s: float = 0.0
+    reason: str = ""
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"t": self.t, "task": self.task,
+                "old_nslots": self.old_nslots, "new_nslots": self.new_nslots,
+                "old_nprocs": self.old_nprocs, "new_nprocs": self.new_nprocs,
+                "trigger": self.trigger, "cut_step": self.cut_step,
+                "latency_s": self.latency_s, "reason": self.reason}
+
+
+@dataclass
+class StallEvent:
+    t: float
+    task: str
+    instance: int
+    silent_s: float
+    timeout_s: float
+    action: str           # what the policy did about it: "rescale" / "drop"
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {"t": self.t, "task": self.task, "instance": self.instance,
+                "silent_s": self.silent_s, "timeout_s": self.timeout_s,
+                "action": self.action}
+
+
+_INSTANCE_RE = re.compile(r"\[\d+\]")
+
+
+def edge_key(channel_name: str) -> str:
+    """Instance-invariant identity of a channel's edge.
+
+    Channel names carry instance indices (``p[0]->c[1]:a.h5``); the rescale
+    protocol needs to match per-edge state (consumed seqs at a checkpoint
+    step) across instances of different incarnation sizes, so sidecars key by
+    the name with the indices stripped (``p->c:a.h5``)."""
+    return _INSTANCE_RE.sub("", channel_name)
+
+
+class RescaleOp:
+    """One pending M->N resize of a task: the rendezvous between the
+    triggering event, the task's still-live sibling instances, and the driver
+    surgery that rebuilds channels/checkpoints at the new size.
+
+    Lifecycle: created under the supervisor lock (capturing the set of
+    instances that must stop touching the old channels), siblings *arrive* as
+    their channel operations raise ``RescaleInterrupt``; the LAST arriver
+    becomes the leader and executes the surgery callback.  If the required
+    set is empty (every instance already finished, or the sole instance is a
+    fenced zombie) the triggering thread leads immediately."""
+
+    def __init__(self, task: str, old_nslots: int, new_nslots: int,
+                 old_nprocs: int, new_nprocs: int, trigger: str,
+                 reason: str = ""):
+        self.task = task
+        self.old_nslots = old_nslots
+        self.new_nslots = new_nslots
+        self.old_nprocs = old_nprocs
+        self.new_nprocs = new_nprocs
+        self.trigger = trigger
+        self.reason = reason
+        self.t0 = time.monotonic()
+        self.required: set = set()
+        self.arrived: set = set()
+        self.leader_claimed = False
+        self.done = threading.Event()
+        self.cut_step = -1
+        self.error: Optional[BaseException] = None
+
+
+# ---------------------------------------------------------------------------
 # checkpoint / restore surface (TaskComm.checkpoint / restore)
 # ---------------------------------------------------------------------------
 class RecoveryContext:
@@ -343,6 +525,9 @@ class RecoveryContext:
         self._ck = None
         self._next_step = 0
         self._lock = threading.Lock()
+        # set by a rescale when a newer incarnation owns this (task, instance):
+        # every later checkpoint/ack/restore from the fenced zombie raises.
+        self.superseded = False
 
     def _checkpointer(self):
         # lazy: tasks that never checkpoint never create the directory
@@ -353,7 +538,8 @@ class RecoveryContext:
             return self._ck
 
     def checkpoint(self, state: Any, step: Optional[int] = None,
-                   block: bool = True) -> int:
+                   block: bool = True,
+                   sharded_axes: Optional[Dict[str, int]] = None) -> int:
         """Save ``state`` and ack this instance's channels.
 
         ``block=True`` (the default) waits for the container to be durable
@@ -361,17 +547,54 @@ class RecoveryContext:
         are consumed/served", so acking an un-durable checkpoint would lose
         data on a crash in the write window.  ``block=False`` overlaps the
         write with compute at the cost of that window (cadence guidance in
-        DESIGN.md)."""
+        DESIGN.md).
+
+        ``sharded_axes`` declares which top-level keys of a flat-dict state
+        hold this instance's *shard* of a task-global array (key -> axis);
+        a later M->N rescale re-cuts exactly those leaves through
+        ``reshard_blocks`` and requires the rest to be replicas.  The
+        declaration is persisted next to the checkpoints (``sharded.json``)
+        so the rescale surgery -- which runs with no task code on the stack
+        -- can find it."""
+        if self.superseded:
+            raise SupersededError(
+                f"{self.task}[{self.instance}]: checkpoint after rescale "
+                f"superseded this incarnation")
         ck = self._checkpointer()
         if step is None:
             step = self._next_step
         ck.save(step, state, block=block)
         self._next_step = step + 1
+        if sharded_axes:
+            self._write_json("sharded.json", dict(sharded_axes))
+        # per-step consumed-seq sidecar: which channel seq each incoming edge
+        # had delivered when this step became durable.  The rescale cut
+        # replays everything after this watermark into the new partition.
+        # Duck-typed stand-ins without the rescale surface just don't get a
+        # watermark (they can't be rescaled either).
+        self._write_json(
+            f"seqs_{step:08d}.json",
+            {"step": step,
+             "seqs": {edge_key(ch.name): ch.delivered_seq
+                      for ch in self.incoming
+                      if hasattr(ch, "name")
+                      and hasattr(ch, "delivered_seq")}})
         self.ack()
         return step
 
+    def _write_json(self, name: str, payload: Dict[str, Any]) -> None:
+        os.makedirs(self.directory, exist_ok=True)
+        tmp = os.path.join(self.directory, name + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, os.path.join(self.directory, name))
+
     def ack(self) -> None:
         """Mark everything served/delivered so far as durable (checkpointed)."""
+        if self.superseded:
+            raise SupersededError(
+                f"{self.task}[{self.instance}]: ack after rescale superseded "
+                f"this incarnation")
         for ch in self.outgoing:
             ch.ack_producer()
         for ch in self.incoming:
@@ -379,11 +602,23 @@ class RecoveryContext:
 
     def restore(self, like: Any) -> Optional[Tuple[int, Any]]:
         """(step, state) from the newest checkpoint, or None on fresh start."""
+        if self.superseded:
+            raise SupersededError(
+                f"{self.task}[{self.instance}]: restore after rescale "
+                f"superseded this incarnation")
         from ..train.checkpoint import restore_latest
         out = restore_latest(self.directory, like)
         if out is not None:
             self._next_step = out[0] + 1
         return out
+
+    def latest_step(self) -> Optional[int]:
+        """Newest durable checkpoint step, without creating the directory."""
+        p = os.path.join(self.directory, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return int(f.read().strip())
 
 
 # ---------------------------------------------------------------------------
@@ -449,7 +684,9 @@ class RunSupervisor:
 
     def __init__(self, policies: Dict[str, FailurePolicy],
                  channels: Sequence[Any],
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 task_counts: Optional[Dict[str, int]] = None,
+                 stall_timeouts: Optional[Dict[str, float]] = None):
         self.policies = dict(policies)
         self.channels = list(channels)
         self.faults = faults
@@ -459,6 +696,21 @@ class RunSupervisor:
         self._epoch: Dict[Tuple[str, int], int] = {}
         self.restarts: List[RestartEvent] = []
         self.dropped: List[Tuple[str, int]] = []
+        # ---- elastic rescale / watchdog state -----------------------------
+        self.task_counts: Dict[str, int] = dict(task_counts or {})
+        self.task_nprocs: Dict[str, int] = {}
+        self.stall_timeouts: Dict[str, float] = dict(stall_timeouts or {})
+        self.rescales: List[RescaleEvent] = []
+        self.stalls: List[StallEvent] = []
+        self._pending_rescale: Dict[str, RescaleOp] = {}
+        self._gen: Dict[str, int] = {}          # bumped per completed rescale
+        self._fenced: set = set()               # (task, inst) zombies
+        self._hb_lock = threading.Lock()
+        self._hb: Dict[Tuple[str, int], Tuple[int, float]] = {}
+        self._strikes: Dict[Tuple[str, int], Tuple[int, int]] = {}
+        # driver-installed callbacks: surgery executor + rescale validator
+        self.on_rescale: Optional[Callable[[RescaleOp], None]] = None
+        self.validate_rescale: Optional[Callable[..., None]] = None
 
     # ------------------------------------------------------------- queries
     def policy_for(self, task: str) -> FailurePolicy:
@@ -484,14 +736,17 @@ class RunSupervisor:
     def recovery_active(self) -> bool:
         """True when this run can exercise recovery paths (managed restart
         policies or injected faults) -- gates the prep-retry fast path."""
-        return self.faults is not None or any(
-            p.kind in ("restart", "drop") and p.managed
+        return self.faults is not None or bool(self.stall_timeouts) or any(
+            p.kind in ("restart", "drop", "rescale") and p.managed
             for p in self.policies.values())
 
     # ----------------------------------------------------------- lifecycle
     def mark(self, task: str, instance: int, state: str) -> None:
         with self._lock:
             self._state[(task, instance)] = state
+        if state == TaskState.RUNNING:
+            # a fresh incarnation starts with a full stall-timeout budget
+            self.heartbeat(task, instance)
 
     def fire(self, task: str, instance: int, point: str, step: int) -> None:
         """Fault-injection hook: no-op without a plan."""
@@ -562,12 +817,226 @@ class RunSupervisor:
         with self._lock:
             self._state[(task, instance)] = TaskState.FAILED
 
+    # ------------------------------------------- heartbeats & the watchdog
+    def heartbeat(self, task: str, instance: int) -> None:
+        """Progress signal, fed from the VOL step hooks, ``comm.step()``,
+        checkpoints, and channel wait loops (a consumer parked on an empty
+        channel is *starved*, not stalled -- it keeps heartbeating)."""
+        with self._hb_lock:
+            c, _ = self._hb.get((task, instance), (0, 0.0))
+            self._hb[(task, instance)] = (c + 1, time.monotonic())
+
+    def wait_quantum(self, task: str) -> float:
+        """Heartbeat cadence for a parked wait loop (channel rendezvous /
+        fan-in mux): well inside ``task``'s stall window, so a
+        starved-but-alive instance beats often enough that the watchdog
+        never mistakes the gap between keep-alives for silence."""
+        t = self.stall_timeouts.get(task)
+        if t is None:
+            return 0.5
+        return max(0.02, min(0.5, t / 4.0))
+
+    def scan_stalls(self) -> List[Tuple[str, int, float, float]]:
+        """One watchdog pass: (task, instance, silent_s, timeout_s) for every
+        instance newly DECLARED stalled.  Hysteresis: an instance must be
+        over its timeout on two consecutive scans with no heartbeat movement
+        in between -- a slow-but-progressing task resets its strikes on every
+        heartbeat and is never killed."""
+        out: List[Tuple[str, int, float, float]] = []
+        now = time.monotonic()
+        with self._lock:
+            states = dict(self._state)
+            counts = dict(self.task_counts)
+            pending = set(self._pending_rescale)
+            fenced = set(self._fenced)
+        for task, timeout in self.stall_timeouts.items():
+            if task in pending:
+                continue                      # already being resized
+            for i in range(counts.get(task, 1)):
+                key = (task, i)
+                if states.get(key) != TaskState.RUNNING or key in fenced:
+                    self._strikes.pop(key, None)
+                    continue
+                with self._hb_lock:
+                    c, ts = self._hb.get(key, (0, now))
+                silent = now - ts
+                if silent <= timeout:
+                    self._strikes.pop(key, None)
+                    continue
+                prev_c, strikes = self._strikes.get(key, (c, 0))
+                strikes = strikes + 1 if prev_c == c else 1
+                self._strikes[key] = (c, strikes)
+                if strikes >= 2:
+                    self._strikes.pop(key, None)
+                    out.append((task, i, silent, timeout))
+        return out
+
+    def record_stall(self, ev: StallEvent) -> None:
+        with self._lock:
+            self.stalls.append(ev)
+
+    # --------------------------------------------------- elastic rescale
+    def generation(self, task: str) -> int:
+        with self._lock:
+            return self._gen.get(task, 0)
+
+    def is_superseded(self, task: str, gen: int) -> bool:
+        """True when a rescale completed after the caller's incarnation was
+        launched -- the caller is a zombie and must exit quietly."""
+        return self.generation(task) > gen
+
+    def fence(self, task: str, instance: int) -> None:
+        with self._lock:
+            self._fenced.add((task, instance))
+
+    def is_fenced(self, task: str, instance: int) -> bool:
+        with self._lock:
+            return (task, instance) in self._fenced
+
+    def pending_rescale(self, task: str) -> Optional[RescaleOp]:
+        with self._lock:
+            return self._pending_rescale.get(task)
+
+    def request_rescale(self, task: str, nslots: Optional[int] = None,
+                        nprocs: Optional[int] = None, trigger: str = "policy",
+                        reason: str = "",
+                        fence_instance: Optional[int] = None
+                        ) -> Tuple[RescaleOp, bool]:
+        """Create (or join) the pending ``RescaleOp`` for ``task``.
+
+        Returns ``(op, lead)``; ``lead`` is True when the CALLER must execute
+        the surgery immediately (no live instance remains to arrive last --
+        e.g. a watchdog resizing a task whose only instance is the fenced
+        zombie).  Joining an existing op never leads."""
+        with self._lock:
+            op = self._pending_rescale.get(task)
+            if op is not None:
+                return op, False
+            if fence_instance is not None:
+                self._fenced.add((task, fence_instance))
+            M = self.task_counts.get(task, 1)
+            old_np = self.task_nprocs.get(task, 1)
+            op = RescaleOp(task, M,
+                           nslots if nslots is not None else M,
+                           old_np,
+                           nprocs if nprocs is not None else old_np,
+                           trigger, reason)
+            op.required = {
+                i for i in range(M)
+                if self._state.get((task, i), TaskState.PENDING)
+                not in (TaskState.DONE, TaskState.DROPPED)
+                and (task, i) not in self._fenced}
+            self._pending_rescale[task] = op
+            lead = False
+            if not op.required:
+                op.leader_claimed = True
+                lead = True
+        # outside the lock: pull every old instance out of its callable --
+        # its next (or currently blocked) channel operation raises
+        # RescaleInterrupt, which the driver converts into op arrival
+        for i in range(op.old_nslots):
+            incoming, _ = self._instance_channels(task, i)
+            for ch in incoming:
+                ch.interrupt_consumer(RescaleInterrupt(task, i))
+        return op, lead
+
+    def arrive(self, op: RescaleOp, instance: int) -> bool:
+        """An old instance stopped touching the old channels.  Returns True
+        when this arrival completed the required set: the caller is the
+        leader and must execute the surgery (``lead(op)``)."""
+        with self._lock:
+            if instance not in op.required:
+                return False
+            op.arrived.add(instance)
+            if op.required <= op.arrived and not op.leader_claimed:
+                op.leader_claimed = True
+                return True
+        return False
+
+    def lead(self, op: RescaleOp) -> None:
+        """Execute the surgery through the driver-installed callback."""
+        if self.on_rescale is None:
+            raise RescaleError(
+                f"task {op.task!r}: rescale requested but no surgery "
+                f"executor is attached (is the run managed?)")
+        self.on_rescale(op)
+
+    def rescale(self, task: str, nslots: Optional[int] = None,
+                nprocs: Optional[int] = None, reason: str = "") -> RescaleOp:
+        """Programmatic trigger (``RunSupervisor.rescale(task, ...)``): resize
+        ``task`` without waiting for a crash.  Asynchronous -- live instances
+        are interrupted and the last one to arrive performs the surgery;
+        ``op.done.wait()`` blocks until it lands."""
+        if self.validate_rescale is not None:
+            self.validate_rescale(task, nslots=nslots, nprocs=nprocs)
+        op, lead = self.request_rescale(task, nslots=nslots, nprocs=nprocs,
+                                        trigger="api", reason=reason)
+        if lead:
+            self.lead(op)
+        return op
+
+    def finish_rescale(self, op: RescaleOp, cut_step: int = -1) -> RescaleEvent:
+        """Seal a completed surgery: bump the task's generation (fencing every
+        pre-rescale incarnation), adopt the new sizes, and record the event."""
+        now = time.monotonic()
+        with self._lock:
+            self._gen[op.task] = self._gen.get(op.task, 0) + 1
+            self.task_counts[op.task] = op.new_nslots
+            self.task_nprocs[op.task] = op.new_nprocs
+            self._pending_rescale.pop(op.task, None)
+            self._fenced = {(t, i) for (t, i) in self._fenced
+                            if t != op.task}
+            for i in range(max(op.old_nslots, op.new_nslots)):
+                key = (op.task, i)
+                self._attempt[key] = self._attempt.get(key, 0) + 1
+                self._epoch[key] = self._epoch.get(key, 0) + 1
+                self._state.pop(key, None)
+            ev = RescaleEvent(now, op.task, op.old_nslots, op.new_nslots,
+                              op.old_nprocs, op.new_nprocs, op.trigger,
+                              cut_step, now - op.t0, op.reason)
+            self.rescales.append(ev)
+        op.cut_step = cut_step
+        op.done.set()
+        return ev
+
+    def fail_rescale(self, op: RescaleOp, error: BaseException) -> None:
+        with self._lock:
+            self._pending_rescale.pop(op.task, None)
+        op.error = error
+        op.done.set()
+
+    def mark_done_or_join(self, task: str, instance: int
+                          ) -> Optional[RescaleOp]:
+        """DONE-transition that cannot race a pending rescale: if an op for
+        this task exists and the instance is required, return the op (the
+        caller must ``arrive`` instead of finishing); else mark DONE."""
+        with self._lock:
+            op = self._pending_rescale.get(task)
+            if op is not None and instance in op.required \
+                    and instance not in op.arrived:
+                return op
+            # a watchdog-dropped instance that later wakes and runs to the
+            # end stays DROPPED -- its output was already written off
+            if self._state.get((task, instance)) != TaskState.DROPPED:
+                self._state[(task, instance)] = TaskState.DONE
+            return None
+
+    def replace_channels(self, old: Sequence[Any],
+                         new: Sequence[Any]) -> None:
+        """Swap a rescaled task's retired channels for the new partition's."""
+        with self._lock:
+            dead = {id(c) for c in old}
+            self.channels = [c for c in self.channels if id(c) not in dead]
+            self.channels.extend(new)
+
     # ------------------------------------------------------------ snapshot
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
             return {
                 "restarts": [e.as_dict() for e in self.restarts],
                 "dropped": list(self.dropped),
+                "rescales": [e.as_dict() for e in self.rescales],
+                "stalls": [e.as_dict() for e in self.stalls],
                 "states": {f"{t}[{i}]": s
                            for (t, i), s in sorted(self._state.items())},
                 "faults_fired": self.faults.fired() if self.faults else 0,

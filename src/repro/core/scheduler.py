@@ -595,6 +595,8 @@ class SchedulerRuntime:
         self._steps = 0
         self._ticks = 0
         self._restarts = 0
+        self._rescales = 0
+        self._stalls = 0
         self._step_sources: Dict[str, int] = {}
         self._closed = False
 
@@ -632,6 +634,38 @@ class SchedulerRuntime:
         with self._tick_lock:
             self.timeline.sample(self.channels)
 
+    def notify_rescale(self, task: str, old_nslots: int, new_nslots: int,
+                       old_nprocs: int, new_nprocs: int, trigger: str,
+                       cut_step: int, latency_s: float,
+                       reason: str = "") -> None:
+        """An elastic rescale completed: old->new size, what triggered it
+        (policy / stall / api), the checkpoint step the new incarnation
+        resumed from, and how long the surgery took."""
+        with self._lock:
+            if self._closed:
+                return
+            self._rescales += 1
+        self.timeline.record_event(
+            "rescale", task=task, old_nslots=old_nslots,
+            new_nslots=new_nslots, old_nprocs=old_nprocs,
+            new_nprocs=new_nprocs, trigger=trigger, cut_step=cut_step,
+            latency_s=latency_s, reason=reason)
+        with self._tick_lock:
+            self.timeline.sample(self.channels)
+
+    def notify_stall(self, task: str, instance: int, silent_s: float,
+                     timeout_s: float, action: str) -> None:
+        """The watchdog declared an instance stalled (no heartbeat for
+        ``silent_s`` against a ``timeout_s`` budget) and is applying
+        ``action`` (rescale / drop)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._stalls += 1
+        self.timeline.record_event(
+            "stall", task=task, instance=instance, silent_s=silent_s,
+            timeout_s=timeout_s, action=action)
+
     def tick(self) -> None:
         # Serialized: step events fire from many producer/consumer threads,
         # but one tick at a time keeps the autotuner's deltas coherent.
@@ -668,4 +702,8 @@ class SchedulerRuntime:
             "telemetry_dropped": self.timeline.dropped,
             "restarts": self._restarts,
             "restart_events": self.timeline.events("restart"),
+            "rescales": self._rescales,
+            "rescale_events": self.timeline.events("rescale"),
+            "stalls": self._stalls,
+            "stall_events": self.timeline.events("stall"),
         }

@@ -98,6 +98,10 @@ class VOL:
         self._broadcast_log: List[str] = []
         self._open_files: Dict[str, File] = {}
         self.log: List[Tuple[float, str]] = []
+        # Serialize serving against the rescale channel swap: a resize of a
+        # downstream task replaces entries of ``self.outgoing`` under this
+        # lock, so a serve never straddles old and new channel sets.
+        self.serve_lock = threading.Lock()
 
     # ------------------------------------------------------------ properties
     def set_memory(self, filename_pattern: str, dset_pattern: str = "*") -> None:
@@ -183,17 +187,18 @@ class VOL:
         they intentionally miss each other's cache entries.
         """
         n = 0
-        for f in list(self._unserved):
-            payload_cache: Dict[Any, File] = {}
-            for ch in self.outgoing:
-                if not ch.matches_file(f.filename):
-                    continue
-                if ch.mode == "memory" and not memory:
-                    continue
-                if ch.mode == "file" and not file:
-                    continue
-                if ch.offer(f, _payload_cache=payload_cache):
-                    n += 1
+        with self.serve_lock:
+            for f in list(self._unserved):
+                payload_cache: Dict[Any, File] = {}
+                for ch in self.outgoing:
+                    if not ch.matches_file(f.filename):
+                        continue
+                    if ch.mode == "memory" and not memory:
+                        continue
+                    if ch.mode == "file" and not file:
+                        continue
+                    if ch.offer(f, _payload_cache=payload_cache):
+                        n += 1
         return n
 
     def clear_files(self) -> None:
@@ -215,6 +220,8 @@ class VOL:
     def on_file_close(self, f: File) -> None:
         sup = self.supervisor  # local: the driver may detach it concurrently
         if sup is not None:
+            # every step boundary is a health signal for the stall watchdog
+            sup.heartbeat(self.task, self.instance)
             # fault point "close": the producer crashes AT the step boundary,
             # before this step's data is served -- the canonical lost-step
             # (step is 0-based: the close about to complete)
@@ -249,6 +256,7 @@ class VOL:
         """
         sup = self.supervisor  # local: the driver may detach it concurrently
         if sup is not None:
+            sup.heartbeat(self.task, self.instance)
             # fault point "open": the consumer crashes before asking for
             # data (nothing delivered yet -- restart re-opens cleanly)
             sup.fire(self.task, self.instance, "open", self.file_open_counter)
@@ -292,7 +300,13 @@ class VOL:
                         return r
                 if not any_live:
                     return None  # all producers report all-done (query protocol)
-                mux.wait(token)
+                if sup is not None:
+                    # bounded sleep + heartbeat: a consumer parked in the
+                    # fan-in mux is starved, not stalled (watchdog hysteresis)
+                    sup.heartbeat(self.task, self.instance)
+                    mux.wait(token, timeout=sup.wait_quantum(self.task))
+                else:
+                    mux.wait(token)
         finally:
             for c in chans:
                 c.set_consumer_waiting(False)
@@ -318,14 +332,23 @@ class VOL:
         self.file_open_counter = 0
         self.dataset_write_counter = 0
 
+    def update_ownership_nranks(self, old_nranks: int, new_nranks: int) -> None:
+        """nprocs rescale: re-point declared producer decompositions at the
+        new logical rank count (entries pinned to other counts -- an explicit
+        YAML ``nranks:`` -- are left alone)."""
+        self._ownership = [
+            (m, axis, new_nranks if n == old_nranks else n)
+            for (m, axis, n) in self._ownership]
+
     # ------------------------------------------------------------- shutdown
     def finalize(self) -> None:
         """Task function returned: serve any leftover files, mark all-done."""
         if self._unserved:
             self.serve_all(True, True)
             self.clear_files()
-        for ch in self.outgoing:
-            ch.finish()
+        with self.serve_lock:
+            for ch in self.outgoing:
+                ch.finish()
 
     def __repr__(self) -> str:
         return (f"<VOL task={self.task}[{self.instance}] out={len(self.outgoing)} "

@@ -32,7 +32,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["save_pytree", "load_pytree", "AsyncCheckpointer", "restore_latest"]
+__all__ = ["save_pytree", "load_pytree", "load_pytree_flat",
+           "AsyncCheckpointer", "restore_latest"]
 
 
 def _flatten_with_paths(tree: Any) -> List[Tuple[str, np.ndarray]]:
@@ -81,6 +82,22 @@ def load_pytree(path: str, like: Any) -> Any:
             raise ValueError(f"shape mismatch {ref.shape} vs {arr.shape}")
         leaves.append(arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_pytree_flat(path: str) -> Dict[str, np.ndarray]:
+    """Load a container WITHOUT a reference structure: {path-key: array}.
+
+    The elastic-rescale path re-cuts a dead task's checkpoint into a
+    different number of shards; at that point nobody holds a ``like``
+    structure of the old size, so the order-checked :func:`load_pytree` is
+    unusable.  Keys are the flatten-with-path strings written at save time
+    (a flat dict state ``{"acc": ...}`` yields the key ``"['acc']"``).
+    """
+    with open(path, "rb") as f:
+        hlen = int.from_bytes(f.read(8), "little")
+        meta = json.loads(f.read(hlen).decode())
+        npz = np.load(f)
+        return {k: npz[f"a{i}"] for i, k in enumerate(meta["keys"])}
 
 
 def _ckpt_name(step: int) -> str:

@@ -1,0 +1,621 @@
+"""Elastic rescale: supervisor-driven M->N restart with channel
+re-partitioning, plus the stall/health watchdog.
+
+The workflow under test mirrors the recovery suite's 2-producer /
+2-consumer diamond, but the consumers run ``taskCount: 2`` with
+redistributing inports and an ``on_failure: {rescale: {nslots: N}}``
+policy: a crash (or a watchdog-declared stall, or a programmatic
+``comm.rescale`` call) brings the consumer down and relaunches it at a
+DIFFERENT instance count.  The checkpointed accumulator is sharded along
+axis 0 (``sharded_axes={"acc": 0}``), so the surgery re-cuts it across
+the new instances with ``reshard_blocks`` and replays the undelivered
+steps into the re-partitioned channels -- the concatenated final output
+must be byte-identical to a crash-free run at any size.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (FailurePolicy, FaultSpec, TelemetryTimeline, Wilkins,
+                        WorkflowGraph, h5, reshard_blocks, world)
+from repro.core.redistribute import even_blocks
+
+STEPS = 4
+GLOBAL = 50  # deliberately not divisible by 3: ragged shards in the sweep
+
+DSETS = {"a.h5": "/g", "b.h5": "/h"}
+
+
+def _a(t):
+    return np.arange(GLOBAL, dtype=np.float64) + 100.0 * t
+
+
+def _b(t):
+    return 2.0 * np.arange(GLOBAL, dtype=np.float64) + 1000.0 * t
+
+
+EXPECTED_C1 = sum(_a(t) for t in range(STEPS))
+EXPECTED_C2 = sum(_a(t) + 3.0 * _b(t) for t in range(STEPS))
+
+
+def _rescale_yaml(n1=1, n2=1, extra_c1="", nprocs_c1=1):
+    """2 single-instance producers -> 2 two-instance elastic consumers."""
+    return f"""
+tasks:
+  - func: p1
+    outports:
+      - filename: a.h5
+        dsets: [{{name: /g, memory: 1}}]
+    on_failure:
+      restart: {{max_retries: 3}}
+  - func: p2
+    outports:
+      - filename: b.h5
+        dsets: [{{name: /h, memory: 1}}]
+    on_failure:
+      restart: {{max_retries: 3}}
+  - func: c1
+    taskCount: 2
+    nprocs: {nprocs_c1}
+    {extra_c1}
+    inports:
+      - filename: a.h5
+        redistribute: 1
+        dsets: [{{name: /g, memory: 1}}]
+    on_failure:
+      rescale: {{nslots: {n1}, max_retries: 3}}
+  - func: c2
+    taskCount: 2
+    inports:
+      - filename: a.h5
+        redistribute: 1
+        dsets: [{{name: /g, memory: 1}}]
+      - filename: b.h5
+        redistribute: 1
+        dsets: [{{name: /h, memory: 1}}]
+    on_failure:
+      rescale: {{nslots: {n2}, max_retries: 3}}
+"""
+
+
+def _make_producer(filename, dset, make):
+    def producer():
+        comm = world()
+        state = {"step": np.zeros((), np.int64)}
+        restored = comm.restore(state)
+        start = 0
+        if restored is not None:
+            _, state = restored
+            start = int(state["step"])
+        for t in range(start, STEPS):
+            with h5.File(filename, "w") as f:
+                f.create_dataset(DSETS[filename], data=make(t))
+            comm.checkpoint({"step": np.array(t + 1, np.int64)})
+    return producer
+
+
+def _make_consumer(results, key, primary, extras=(), weights=(1.0,)):
+    """Accumulate this instance's slab of every step; shard-checkpoint it.
+
+    The accumulator is sized from the instance's frozen ``RedistSpec``
+    (slot block along axis 0), so the same function body runs unchanged
+    at ANY instance count -- including the post-rescale incarnations,
+    whose restored ``acc`` was re-cut by the surgery.
+    """
+    def consumer():
+        comm = world()
+        spec = comm.resolve_redist_spec(port=primary)
+        _, shape = even_blocks((GLOBAL,), spec.nslots)[spec.slot]
+        like = {"acc": np.zeros(shape, np.float64),
+                "n": np.zeros((), np.int64)}
+        state = like
+        restored = comm.restore(like)
+        if restored is not None:
+            _, state = restored
+        acc = np.asarray(state["acc"]).copy()
+        n = int(state["n"])
+        while True:
+            f0 = h5.File(primary, "r")
+            if f0 is None:
+                break
+            delta = weights[0] * f0[DSETS[primary]][...]
+            for w, extra in zip(weights[1:], extras):
+                fx = h5.File(extra, "r")
+                delta = delta + w * fx[DSETS[extra]][...]
+            acc = acc + delta
+            n += 1
+            comm.checkpoint({"acc": acc, "n": np.array(n, np.int64)},
+                            sharded_axes={"acc": 0})
+        results[(key, comm.instance)] = (acc.copy(), n)
+    return consumer
+
+
+def _rescale_workflow(tmp_path, tag, n1=1, n2=1, extra_c1="", nprocs_c1=1):
+    results = {}
+    funcs = {
+        "p1": _make_producer("a.h5", "/g", _a),
+        "p2": _make_producer("b.h5", "/h", _b),
+        "c1": _make_consumer(results, "c1", "a.h5"),
+        "c2": _make_consumer(results, "c2", "a.h5", extras=("b.h5",),
+                             weights=(1.0, 3.0)),
+    }
+    w = Wilkins(_rescale_yaml(n1=n1, n2=n2, extra_c1=extra_c1,
+                              nprocs_c1=nprocs_c1),
+                funcs, spill_dir=str(tmp_path / tag))
+    return w, results
+
+
+def _assert_byte_identical(w, results):
+    """Concatenated per-instance accumulators == the closed-form global sum,
+    byte for byte, at whatever size each consumer ENDED the run."""
+    for key, expected in (("c1", EXPECTED_C1), ("c2", EXPECTED_C2)):
+        n_inst = w.graph.tasks[key].task_count
+        parts = []
+        for j in range(n_inst):
+            assert (key, j) in results, \
+                f"{key}[{j}] never finished (have {sorted(results)})"
+            acc, n = results[(key, j)]
+            assert n == STEPS, f"{key}[{j}] saw {n}/{STEPS} steps"
+            parts.append(acc)
+        got = np.concatenate(parts)
+        assert got.tobytes() == expected.tobytes(), \
+            f"{key}: output differs from crash-free reference"
+
+
+# ---------------------------------------------------------------------------
+# baseline: the elastic workflow without any fault is byte-exact at size 2
+# ---------------------------------------------------------------------------
+def test_crash_free_elastic_workflow(tmp_path):
+    w, results = _rescale_workflow(tmp_path, "ref")
+    rep = w.run(timeout=60)
+    _assert_byte_identical(w, results)
+    assert rep.rescales == []
+    assert rep.stalls == []
+    assert w.graph.tasks["c1"].task_count == 2
+
+
+# ---------------------------------------------------------------------------
+# tentpole: crash -> policy rescale (shrink AND grow) -> byte-identical
+# ---------------------------------------------------------------------------
+def test_policy_rescale_shrink_byte_identical(tmp_path):
+    """c1 crashes mid-stream; ``rescale: {nslots: 1}`` relaunches it at
+    half size, re-cuts the shard checkpoints, replays the undelivered
+    steps -- and the event is visible in report, summary and timeline."""
+    w, results = _rescale_workflow(tmp_path, "shrink", n1=1)
+    rep = w.run(timeout=60,
+                faults=FaultSpec(task="c1", point="recv", step=1, instance=0))
+    _assert_byte_identical(w, results)
+    assert w.graph.tasks["c1"].task_count == 1
+
+    assert len(rep.rescales) == 1
+    ev = rep.rescales[0]
+    assert ev["task"] == "c1"
+    assert ev["old_nslots"] == 2 and ev["new_nslots"] == 1
+    assert ev["trigger"] == "policy"
+    assert ev["latency_s"] >= 0.0
+    assert "InjectedFault" in ev["reason"]
+    # visibility: timeline event, summary line, scheduler snapshot
+    tl = rep.timeline.events("rescale")
+    assert len(tl) == 1 and tl[0]["task"] == "c1"
+    assert tl[0]["old_nslots"] == 2 and tl[0]["new_nslots"] == 1
+    assert "RESCALE c1: nslots 2->1" in rep.summary()
+    assert rep.scheduler["rescale_events"] == tl
+    assert rep.scheduler["rescales"] == 1
+
+
+def test_policy_rescale_grow_byte_identical(tmp_path):
+    """c2 (the fan-in consumer) grows 2->3: both inbound edges are re-cut
+    to three slots and the ragged 50-element shards still sum exactly."""
+    w, results = _rescale_workflow(tmp_path, "grow", n2=3)
+    rep = w.run(timeout=60,
+                faults=FaultSpec(task="c2", point="open", step=2, instance=1))
+    _assert_byte_identical(w, results)
+    assert w.graph.tasks["c2"].task_count == 3
+    assert len(rep.rescales) == 1
+    assert rep.rescales[0]["new_nslots"] == 3
+    assert "RESCALE c2: nslots 2->3" in rep.summary()
+
+
+def test_rescale_with_producer_restart_in_same_run(tmp_path):
+    """A producer crash (plain restart) and a consumer rescale in ONE run:
+    the two recovery protocols compose."""
+    w, results = _rescale_workflow(tmp_path, "mixed", n1=1)
+    rep = w.run(timeout=60, faults=[
+        FaultSpec(task="p1", point="close", step=1),
+        FaultSpec(task="c1", point="recv", step=2, instance=1),
+    ])
+    _assert_byte_identical(w, results)
+    assert [r["task"] for r in rep.restarts] == ["p1"]
+    assert [r["task"] for r in rep.rescales] == ["c1"]
+
+
+# ---------------------------------------------------------------------------
+# satellite: the M->N sweep -- every task, every step boundary, every
+# target size in {1, 2, 3} (grow, same-size, shrink)
+# ---------------------------------------------------------------------------
+def _sweep_cases():
+    cases = []
+    for n in (1, 2, 3):
+        for pt in ("open", "recv"):
+            for s in range(STEPS):
+                cases.append(("c1", pt, s, n))
+            # c2 opens two files per loop iteration: steps run 0..2*STEPS-1
+            for s in range(2 * STEPS):
+                cases.append(("c2", pt, s, n))
+    return cases
+
+
+SWEEP = _sweep_cases()
+#: fast representative subset: shrink/grow/same-size, first/mid/last step,
+#: pre-delivery (open) and post-delivery (recv) windows, both consumers
+FAST_SWEEP = [
+    ("c1", "recv", 0, 1),          # shrink from the very first delivery
+    ("c1", "open", STEPS - 1, 3),  # grow at the last pre-delivery window
+    ("c2", "recv", 3, 1),          # fan-in shrink mid-stream (b.h5 leg)
+    ("c2", "open", 5, 3),          # fan-in grow late (a.h5 leg, step 2)
+    ("c1", "recv", 2, 2),          # same-size rescale == managed restart
+]
+
+
+def _run_sweep_case(tmp_path, task, point, step, n):
+    kw = {"n1": n} if task == "c1" else {"n2": n}
+    w, results = _rescale_workflow(tmp_path, f"{task}_{point}_{step}_{n}",
+                                   **kw)
+    rep = w.run(timeout=60,
+                faults=FaultSpec(task=task, point=point, step=step))
+    _assert_byte_identical(w, results)
+    assert w.graph.tasks[task].task_count == n
+    if n != 2:
+        assert [r["task"] for r in rep.rescales] == [task]
+        assert rep.rescales[0]["new_nslots"] == n
+
+
+@pytest.mark.parametrize("task,point,step,n", FAST_SWEEP)
+def test_rescale_sweep_representative(tmp_path, task, point, step, n):
+    _run_sweep_case(tmp_path, task, point, step, n)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("task,point,step,n", SWEEP)
+def test_rescale_sweep_exhaustive(tmp_path, task, point, step, n):
+    _run_sweep_case(tmp_path, task, point, step, n)
+
+
+# ---------------------------------------------------------------------------
+# programmatic trigger: comm.rescale() without any fault
+# ---------------------------------------------------------------------------
+def test_programmatic_rescale_from_task_code(tmp_path):
+    """A steering task calls ``comm.rescale("c1", nslots=1)`` mid-run; the
+    supervisor interrupts the live instances and the last arriver performs
+    the surgery -- no crash anywhere."""
+    results = {}
+
+    def p1():
+        comm = world()
+        state = {"step": np.zeros((), np.int64)}
+        restored = comm.restore(state)
+        start = int(restored[1]["step"]) if restored is not None else 0
+        for t in range(start, STEPS):
+            with h5.File("a.h5", "w") as f:
+                f.create_dataset("/g", data=_a(t))
+            comm.checkpoint({"step": np.array(t + 1, np.int64)})
+            if t == 1 and start == 0:
+                op = comm.rescale("c1", nslots=1, reason="steering decision")
+                assert op is not None
+
+    funcs = {
+        "p1": p1,
+        "p2": _make_producer("b.h5", "/h", _b),
+        "c1": _make_consumer(results, "c1", "a.h5"),
+        "c2": _make_consumer(results, "c2", "a.h5", extras=("b.h5",),
+                             weights=(1.0, 3.0)),
+    }
+    w = Wilkins(_rescale_yaml(n1=1), funcs, spill_dir=str(tmp_path / "api"))
+    rep = w.run(timeout=60)
+    _assert_byte_identical(w, results)
+    assert w.graph.tasks["c1"].task_count == 1
+    assert len(rep.rescales) == 1
+    ev = rep.rescales[0]
+    assert ev["trigger"] == "api" and ev["reason"] == "steering decision"
+    assert "RESCALE c1" in rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# satellite: health watchdog -- stall detection and rescale-down
+# ---------------------------------------------------------------------------
+def test_watchdog_stall_triggers_rescale_down(tmp_path):
+    """c1[0] goes silent (injected stall far past ``stall_timeout_s``); the
+    watchdog declares it stalled, fences it, and applies the rescale
+    policy.  The zombie wakes into a superseded world and exits quietly;
+    output stays byte-identical at the new size."""
+    w, results = _rescale_workflow(
+        tmp_path, "stall", n1=1, extra_c1="stall_timeout_s: 0.25")
+    rep = w.run(timeout=60,
+                faults=FaultSpec(task="c1", kind="stall", point="recv",
+                                 step=1, instance=0, seconds=1.5))
+    _assert_byte_identical(w, results)
+    assert w.graph.tasks["c1"].task_count == 1
+
+    assert len(rep.stalls) == 1
+    st = rep.stalls[0]
+    assert st["task"] == "c1" and st["instance"] == 0
+    assert st["silent_s"] >= st["timeout_s"] == 0.25
+    assert st["action"] == "rescale"
+    assert len(rep.rescales) == 1
+    assert rep.rescales[0]["trigger"] == "stall"
+    # visibility: timeline + summary
+    assert len(rep.timeline.events("stall")) == 1
+    assert "STALL c1[0]" in rep.summary()
+    assert "RESCALE c1: nslots 2->1" in rep.summary()
+
+
+def test_watchdog_hysteresis_spares_slow_tasks(tmp_path):
+    """Slow-but-progressing is NOT stalled: per-step delays shorter than
+    the window keep the heartbeats coming, so the 2-strike hysteresis
+    never fires and the task finishes at its original size."""
+    w, results = _rescale_workflow(
+        tmp_path, "slow", n1=1, extra_c1="stall_timeout_s: 0.6")
+    rep = w.run(timeout=60,
+                faults=FaultSpec(task="c1", kind="slow_io", point="recv",
+                                 step=None, times=None, attempt=None,
+                                 seconds=0.12))
+    _assert_byte_identical(w, results)
+    assert w.graph.tasks["c1"].task_count == 2
+    assert rep.stalls == []
+    assert rep.rescales == []
+
+
+# ---------------------------------------------------------------------------
+# nprocs-only rescale: logical rank count moves, topology does not
+# ---------------------------------------------------------------------------
+def test_nprocs_only_rescale(tmp_path):
+    results = {}
+    yaml = _rescale_yaml(n1=1).replace(
+        "rescale: {nslots: 1, max_retries: 3}",
+        "rescale: {nprocs: 2, max_retries: 3}", 1)
+    funcs = {
+        "p1": _make_producer("a.h5", "/g", _a),
+        "p2": _make_producer("b.h5", "/h", _b),
+        "c1": _make_consumer(results, "c1", "a.h5"),
+        "c2": _make_consumer(results, "c2", "a.h5", extras=("b.h5",),
+                             weights=(1.0, 3.0)),
+    }
+    w = Wilkins(yaml, funcs, spill_dir=str(tmp_path / "nprocs"))
+    rep = w.run(timeout=60,
+                faults=FaultSpec(task="c1", point="recv", step=1, instance=0))
+    _assert_byte_identical(w, results)
+    # the instance count never moved; the logical rank count did
+    assert w.graph.tasks["c1"].task_count == 2
+    assert w.graph.tasks["c1"].nprocs == 2
+    assert len(rep.rescales) == 1
+    ev = rep.rescales[0]
+    assert ev["old_nslots"] == 2 and ev["new_nslots"] == 2
+    assert ev["old_nprocs"] == 1 and ev["new_nprocs"] == 2
+    assert "nprocs 1->2" in rep.summary()
+    # every consumer-side frozen spec now subdivides slots into 2 ranks
+    for ch in rep.channels:
+        if ch.consumer[0] == "c1" and ch.redistribute is not None:
+            assert ch.redistribute.nranks == 2
+
+
+# ---------------------------------------------------------------------------
+# satellite: rescale/stall events survive the telemetry JSON roundtrip
+# ---------------------------------------------------------------------------
+def test_rescale_events_survive_json_roundtrip(tmp_path):
+    w, results = _rescale_workflow(
+        tmp_path, "roundtrip", n1=1, extra_c1="stall_timeout_s: 0.25")
+    rep = w.run(timeout=60, faults=[
+        FaultSpec(task="c1", kind="stall", point="recv", step=1, instance=0,
+                  seconds=1.5),
+        FaultSpec(task="c2", point="recv", step=3, instance=0),
+    ])
+    _assert_byte_identical(w, results)
+    text = rep.timeline.to_json()
+    json.loads(text)  # well-formed
+    tl2 = TelemetryTimeline.from_json(text)
+    assert tl2.events("rescale") == rep.timeline.events("rescale")
+    assert tl2.events("stall") == rep.timeline.events("stall")
+    assert len(tl2.events("rescale")) == 2  # c1 (stall) + c2 (policy)
+    assert {e["trigger"] for e in tl2.events("rescale")} == \
+        {"stall", "policy"}
+    # the summary names both surgeries and the stall
+    s = rep.summary()
+    assert "RESCALE c1: nslots 2->1" in s
+    assert "RESCALE c2: nslots 2->1" in s
+    assert "STALL c1[0]" in s
+
+
+# ---------------------------------------------------------------------------
+# satellite: parse-time validation of rescale / stall declarations
+# ---------------------------------------------------------------------------
+def _yaml_with_policy(policy, extra_task="", inport_extra=""):
+    return f"""
+tasks:
+  - func: src
+    {extra_task}
+    outports:
+      - filename: x.h5
+        dsets: [{{name: /d, memory: 1}}]
+  - func: sink
+    inports:
+      - filename: x.h5
+        {inport_extra}
+        dsets: [{{name: /d, memory: 1}}]
+    on_failure:
+      {policy}
+"""
+
+
+def test_graph_rejects_rescale_on_producer():
+    yaml = """
+tasks:
+  - func: src
+    outports:
+      - filename: x.h5
+        dsets: [{name: /d, memory: 1}]
+    on_failure:
+      rescale: {nslots: 2}
+  - func: sink
+    inports:
+      - filename: x.h5
+        dsets: [{name: /d, memory: 1}]
+"""
+    with pytest.raises(ValueError, match="task 'src'.*pure consumer"):
+        WorkflowGraph.from_yaml(yaml)
+
+
+def test_graph_rejects_rescale_with_multi_instance_producer():
+    yaml = _yaml_with_policy("rescale: {nslots: 3}",
+                             extra_task="taskCount: 2")
+    with pytest.raises(ValueError,
+                       match="task 'sink'.*'src' has taskCount=2"):
+        WorkflowGraph.from_yaml(yaml)
+
+
+def test_graph_rejects_rescale_on_file_mode_edge():
+    yaml = """
+tasks:
+  - func: src
+    outports:
+      - filename: x.h5
+        dsets: [{name: /d, file: 1, memory: 0}]
+  - func: sink
+    inports:
+      - filename: x.h5
+        dsets: [{name: /d, file: 1, memory: 0}]
+    on_failure:
+      rescale: {nslots: 2}
+"""
+    with pytest.raises(ValueError, match="task 'sink'.*memory transport"):
+        WorkflowGraph.from_yaml(yaml)
+
+
+def test_graph_rejects_rescale_on_latest_mode_edge():
+    yaml = _yaml_with_policy("rescale: {nslots: 2}",
+                             inport_extra="io_freq: -1")
+    with pytest.raises(ValueError, match="task 'sink'.*io_freq: -1"):
+        WorkflowGraph.from_yaml(yaml)
+
+
+def test_graph_rejects_rescale_on_isolated_task():
+    yaml = """
+tasks:
+  - func: lonely
+    on_failure:
+      rescale: {nslots: 2}
+"""
+    with pytest.raises(ValueError, match="task 'lonely'.*no inport edge"):
+        WorkflowGraph.from_yaml(yaml)
+
+
+def test_graph_rejects_stall_timeout_without_managed_policy():
+    yaml = _yaml_with_policy("restart: {max_retries: 2}",
+                             ).replace("on_failure:",
+                                       "stall_timeout_s: 1.0\n    on_failure:")
+    with pytest.raises(ValueError,
+                       match="task 'sink'.*stall_timeout_s requires"):
+        WorkflowGraph.from_yaml(yaml)
+
+
+def test_graph_rejects_nonpositive_stall_timeout():
+    yaml = _yaml_with_policy("rescale: {nslots: 1}").replace(
+        "on_failure:", "stall_timeout_s: 0\n    on_failure:")
+    with pytest.raises(ValueError,
+                       match="task 'sink'.*stall_timeout_s must be > 0"):
+        WorkflowGraph.from_yaml(yaml)
+
+
+def test_policy_rejects_bad_rescale_mappings():
+    with pytest.raises(ValueError, match="task 't'"):
+        FailurePolicy.from_yaml({"rescale": {"nslots": 0}}, "t")
+    with pytest.raises(ValueError, match="cannot combine rescale"):
+        FailurePolicy.from_yaml({"rescale": {"nslots": 2}, "drop": {}}, "t")
+    with pytest.raises(ValueError, match="cannot combine restart"):
+        FailurePolicy.from_yaml(
+            {"rescale": {"nslots": 2}, "restart": {}}, "t")
+
+
+def test_driver_validates_programmatic_rescale(tmp_path):
+    """The same structural rules guard ``RunSupervisor.rescale`` calls that
+    never went through YAML validation."""
+    w, _ = _rescale_workflow(tmp_path, "val")
+    with pytest.raises(ValueError, match="unknown task"):
+        w._validate_rescale_request("nope", nslots=1)
+    with pytest.raises(ValueError, match="nothing to change"):
+        w._validate_rescale_request("c1")
+    with pytest.raises(ValueError, match="nslots must be >= 1"):
+        w._validate_rescale_request("c1", nslots=0)
+    with pytest.raises(ValueError, match="pure consumer"):
+        w._validate_rescale_request("p1", nslots=2)
+    # a legal request validates clean
+    w._validate_rescale_request("c1", nslots=3)
+    w._validate_rescale_request("p1", nprocs=2)  # nprocs-only is fine
+
+
+# ---------------------------------------------------------------------------
+# satellite: reshard_blocks hardening -- M->N with N>M, ragged shards,
+# empty source blocks, byte-equivalence against the single-shard baseline
+# ---------------------------------------------------------------------------
+def test_reshard_blocks_grow_ragged():
+    g = np.arange(11.0)
+    out = reshard_blocks([g[:4], g[4:8], g[8:]], 5)
+    assert [o.shape[0] for o in out] == [3, 2, 2, 2, 2]
+    assert np.concatenate(out).tobytes() == g.tobytes()
+
+
+def test_reshard_blocks_empty_source_block():
+    g = np.arange(11.0)
+    out = reshard_blocks([g[:4], g[4:4], g[4:]], 2)
+    assert np.concatenate(out).tobytes() == g.tobytes()
+
+
+def test_reshard_blocks_more_ranks_than_elements():
+    out = reshard_blocks([np.arange(3.0)], 5)
+    assert [o.shape[0] for o in out] == [1, 1, 1, 0, 0]
+    assert np.concatenate(out).tolist() == [0.0, 1.0, 2.0]
+
+
+def test_reshard_blocks_all_empty():
+    out = reshard_blocks([np.zeros((0,), np.float32)] * 2, 3)
+    assert [o.shape for o in out] == [(0,)] * 3
+    assert all(o.dtype == np.float32 for o in out)
+
+
+def test_reshard_blocks_preserves_dtype():
+    out = reshard_blocks([np.arange(5, dtype=np.int32)], 2)
+    assert all(o.dtype == np.int32 for o in out)
+
+
+@pytest.mark.parametrize("m,n", [(1, 4), (2, 3), (3, 2), (4, 1), (3, 5)])
+def test_reshard_blocks_matches_single_shard_baseline(m, n):
+    """Re-cutting an M-way decomposition must land byte-identical to
+    cutting the stitched global array directly."""
+    rng = np.random.default_rng(m * 10 + n)
+    g = rng.standard_normal((13, 7))
+    cuts = [s for s, _ in even_blocks((13,), m)][1:]
+    blocks = np.split(g, [c[0] for c in cuts], axis=0)
+    via_m = reshard_blocks(blocks, n)
+    via_1 = reshard_blocks([g], n)
+    assert len(via_m) == len(via_1) == n
+    for a, b in zip(via_m, via_1):
+        assert a.tobytes() == b.tobytes()
+
+
+def test_reshard_blocks_axis1():
+    a = np.arange(24.0).reshape(4, 6)
+    out = reshard_blocks([a[:, :2], a[:, 2:]], 4, axis=1)
+    assert [o.shape for o in out] == [(4, 2), (4, 2), (4, 1), (4, 1)]
+    assert np.concatenate(out, axis=1).tobytes() == a.tobytes()
+
+
+def test_reshard_blocks_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="at least one source block"):
+        reshard_blocks([], 2)
+    with pytest.raises(ValueError, match="new_nranks must be >= 1"):
+        reshard_blocks([np.arange(3.0)], 0)
+    with pytest.raises(ValueError, match="axis 2 out of range"):
+        reshard_blocks([np.arange(3.0)], 2, axis=2)
+    with pytest.raises(ValueError, match="disagree off-axis"):
+        reshard_blocks([np.zeros((2, 3)), np.zeros((2, 4))], 2)
