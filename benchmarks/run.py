@@ -17,7 +17,10 @@
                   latency + overhead vs a same-size restart)
   roofline     -> §Roofline table from the dry-run grid (not a paper artifact)
 
-``--smoke`` is the tier-1 entry point: it runs the pytest suite, a small
+``--smoke`` is the tier-1 entry point: it first runs the pre-run analyzer
+self-check (``repro.analysis`` over every example workflow plus the lock-
+discipline AST lint over ``src/repro`` -- any error-severity finding fails
+the gate), then the pytest suite, a small
 transport bench, a small redistribution bench, and the scheduler bench, and
 fails if any fails (gates: fan-out copy reduction >= 2x, M->N bytes-shipped
 reduction >= 2x, plan-cache hit rate >= 0.9, zero aligned-path copies,
@@ -63,6 +66,16 @@ def _smoke() -> int:
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     if src not in sys.path:  # the in-process bench import needs it too
         sys.path.insert(0, src)
+    print("==== smoke: analyzer self-check ====", flush=True)
+    import glob
+    from repro.analysis.cli import main as _analysis_main
+    examples = sorted(glob.glob(os.path.join(_REPO_ROOT, "examples", "*.py")))
+    rc = _analysis_main(["check", *examples])
+    if rc == 0:
+        rc = _analysis_main(["lint", os.path.join(src, "repro")])
+    if rc != 0:
+        print("==== smoke: analyzer FAILED ====", flush=True)
+        return rc
     skip_pytest = os.environ.get("WILKINS_SMOKE_SKIP_PYTEST", "")
     if skip_pytest.strip().lower() not in ("", "0", "false", "no"):
         print("==== smoke: pytest SKIPPED (WILKINS_SMOKE_SKIP_PYTEST) ====",

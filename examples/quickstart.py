@@ -6,6 +6,15 @@ I/O -- no workflow API calls -- and the YAML is byte-for-byte the shape of the
 paper's Listing 1.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Before running a workflow, the pre-run analyzer ("wilkins check") builds
+the task/port/edge graph from the YAML without executing anything and
+flags deadlock cycles, flow-control hazards, illegal decompositions, and
+policy errors -- every finding in one pass, anchored to the offending
+YAML line:
+
+    PYTHONPATH=src python -m repro.analysis check examples/quickstart.py
+    PYTHONPATH=src python -m repro.analysis codes   # the full WLK registry
 """
 
 import numpy as np

@@ -1,0 +1,30 @@
+"""Pre-run static analysis for Wilkins workflows and the core transport.
+
+Two passes over one diagnostics framework (`analysis.diagnostics`):
+
+* ``analysis.workflow`` -- the offline workflow-graph analyzer
+  (``python -m repro.analysis check workflow.yaml``): deadlock cycles,
+  flow-control hazards, decomposition legality, policy legality.
+* ``analysis.astlint`` + ``analysis.lockcheck`` -- the concurrency
+  checker: an AST lint enforcing the codified lock discipline over
+  ``src/repro/core/``, and an opt-in (``WILKINS_LOCKCHECK=1``) runtime
+  recorder of the cross-thread lock-acquisition graph.
+
+``analysis.rules`` is the shared validation registry ``core.graph`` and
+the driver call into at parse time -- import it (or ``lockcheck``) freely
+from core modules; submodules resolve lazily so pulling in the rule
+registry never drags the analyzer (which itself imports ``core.graph``)
+into the import cycle.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+__all__ = ["rules", "diagnostics", "workflow", "astlint", "lockcheck", "cli"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -47,6 +47,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple, 
 
 import numpy as np
 
+from ..analysis.lockcheck import check_blocking, make_condition, make_lock
 from .datamodel import (BlockOwnership, File, compile_file_pattern,
                         compile_path_pattern, transport_stats)
 from .redistribute import RedistSpec, plan_cache
@@ -161,7 +162,7 @@ class PrefetchPool:
     def __init__(self, max_workers: int = 2,
                  thread_name_prefix: str = "wilkins-prefetch",
                  policy: Optional[QueuePolicy] = None):
-        self._cv = threading.Condition()
+        self._cv = make_condition("pool:prefetch")
         self._policy: QueuePolicy = policy if policy is not None else FifoPolicy()
         self._shutdown = False
         # Error accounting (never drop a prep exception on the floor): every
@@ -267,7 +268,7 @@ class PrefetchPool:
 
 
 _PREFETCH_POOL: Optional[PrefetchPool] = None
-_PREFETCH_POOL_LOCK = threading.Lock()
+_PREFETCH_POOL_LOCK = make_lock("leaf:prefetch_pool_global")
 
 
 def _prefetch_pool() -> PrefetchPool:
@@ -344,7 +345,7 @@ class ChannelMux:
     """
 
     def __init__(self) -> None:
-        self._cond = threading.Condition()
+        self._cond = make_condition("leaf:mux")
         self._version = 0
 
     def notify(self) -> None:
@@ -361,7 +362,9 @@ class ChannelMux:
         caller rescans its channels either way, so spurious wakeups are safe."""
         with self._cond:
             if self._version == token:
-                self._cond.wait(timeout)
+                self._cond.wait(timeout)  # wilkins: ignore[WLK302] -- caller
+                # rescans its channels on every return, so a spurious wakeup
+                # or missed-notify race costs one extra scan, never a hang
             return self._version
 
 
@@ -450,7 +453,7 @@ class Channel:
         # runs on every serve/open for every non-matching filename
         self._match_cache: Dict[str, bool] = {}
 
-        self._lock = threading.Condition()
+        self._lock = make_condition(f"channel.cv:{filename_pattern}")
         # bounded ring (queue_depth) of (kind, payload, seq, epoch, src):
         # positions 0/1 are the pre-recovery item layout; ``seq`` is the
         # producer's serve ordinal (dedup watermark), ``epoch`` the
@@ -501,7 +504,7 @@ class Channel:
         self.stats = ChannelStats(events=deque(maxlen=int(events_maxlen)))
 
     # ------------------------------------------------------------------ util
-    def _event(self, who: str, what: str) -> None:
+    def _event_locked(self, who: str, what: str) -> None:
         if self.record_events:
             ev = self.stats.events
             if ev.maxlen is not None and len(ev) == ev.maxlen:
@@ -607,7 +610,7 @@ class Channel:
             self._serve_seq = self._acked_seq
             self._close_count = self._acked_close_count
             self._epoch = max(self._epoch, epoch)
-            self._event("producer", f"quarantine:epoch={epoch}")
+            self._event_locked("producer", f"quarantine:epoch={epoch}")
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -625,7 +628,7 @@ class Channel:
                 self._replay = []
             self._delivered_seq = self._acked_delivered_seq
             self._epoch = max(self._epoch, epoch)
-            self._event("consumer", f"quarantine:epoch={epoch}")
+            self._event_locked("consumer", f"quarantine:epoch={epoch}")
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -636,7 +639,7 @@ class Channel:
         deliver first -- they were produced before the failure."""
         with self._lock:
             self._poison = (task, instance, error)
-            self._event("producer", "poison")
+            self._event_locked("producer", "poison")
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -650,7 +653,7 @@ class Channel:
             for item in self._queue:
                 self._discard_item_locked(item)
             self._queue.clear()
-            self._event("consumer", "abandoned")
+            self._event_locked("consumer", "abandoned")
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -663,7 +666,7 @@ class Channel:
         re-cut for the new partition."""
         with self._lock:
             self._interrupt = exc
-            self._event("consumer", "interrupt")
+            self._event_locked("consumer", "interrupt")
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -673,7 +676,7 @@ class Channel:
         producer drains out of its rendezvous before the channel swap."""
         with self._lock:
             self._grace = True
-            self._event("producer", "rescale_grace")
+            self._event_locked("producer", "rescale_grace")
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -713,7 +716,7 @@ class Channel:
             self._acked_delivered_seq = delivered_floor
             self._done = bool(done)
             self._epoch = max(self._epoch, epoch)
-            self._event("producer", f"rescale_adopt:epoch={epoch}")
+            self._event_locked("producer", f"rescale_adopt:epoch={epoch}")
 
     def rescale_preload(self, payload: File, seq: int) -> None:
         """Queue one re-partitioned replay payload on an adopted channel
@@ -723,7 +726,7 @@ class Channel:
             self._queue.append(("memory", payload, seq, self._epoch, None))
             self.stats.replayed += 1
             self.stats.served += 1
-            self._event("producer", "rescale_replay")
+            self._event_locked("producer", "rescale_replay")
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -923,19 +926,19 @@ class Channel:
             if self._abandoned:
                 # consumer dropped/dead: the serve is a counted no-op
                 self.stats.dropped += 1
-                self._event("producer", "skip_abandoned")
+                self._event_locked("producer", "skip_abandoned")
                 return False
             self._close_count += 1
             step = self._close_count - 1
             if self.strategy == FlowControl.SOME and (self._close_count % self.freq) != 0:
                 self.stats.dropped += 1
-                self._event("producer", "skip_some")
+                self._event_locked("producer", "skip_some")
                 return False
             if self.strategy == FlowControl.LATEST and not self._waiters:
                 # No incoming request from the consumer: skip this timestep
                 # and proceed to generating the next one (paper §3.6).
                 self.stats.dropped += 1
-                self._event("producer", "skip_latest")
+                self._event_locked("producer", "skip_latest")
                 return False
             # every SERVED close gets a monotonic seq; a restarted producer
             # rewound to its last ack regenerates the same seqs, so serves
@@ -945,7 +948,7 @@ class Channel:
             seq = self._serve_seq
             if seq <= self._delivered_seq:
                 self.stats.deduped += 1
-                self._event("producer", "dedup_replay")
+                self._event_locked("producer", "dedup_replay")
                 return True
             epoch = self._epoch
             # depth is read under the lock: the autotuner retunes it at
@@ -984,7 +987,7 @@ class Channel:
                 # prep has not finished: cancel it rather than prepare
                 # bytes nobody will read (`latest` semantics)
                 self._drop_stale_preps_locked()
-            self._event("producer", "wait_begin")
+            self._event_locked("producer", "wait_begin")
             while (len(self._queue) >= self.queue_depth and not self._done
                    and not self._abandoned and not self._grace):
                 if self._supervisor is not None:
@@ -996,7 +999,7 @@ class Channel:
                 else:
                     self._lock.wait()
             self.stats.producer_wait_s += time.monotonic() - t0
-            self._event("producer", "wait_end")
+            self._event_locked("producer", "wait_end")
             if self._abandoned:
                 self._discard_item_locked(item)
                 return False
@@ -1006,7 +1009,7 @@ class Channel:
             self.stats.served += 1
             if payload_bytes is not None:
                 self.stats.bytes_moved += payload_bytes
-            self._event("producer", "serve")
+            self._event_locked("producer", "serve")
             self._lock.notify_all()
         self._notify_listeners()
         return True
@@ -1030,7 +1033,7 @@ class Channel:
             if kind == "future" and not payload.done():
                 dropped += 1
                 self.stats.dropped += 1
-                self._event("producer", "drop_stale_prep")
+                self._event_locked("producer", "drop_stale_prep")
                 if not payload.cancel():
                     self.stats.prefetch_cancelled += 1
                     transport_stats().record_prefetch_cancelled()
@@ -1104,12 +1107,12 @@ class Channel:
         """Producer signals all-done (query protocol: empty filename list)."""
         with self._lock:
             self._done = True
-            self._event("producer", "done")
+            self._event_locked("producer", "done")
             self._lock.notify_all()
         self._notify_listeners()
 
     # ------------------------------------------------------------- consumer
-    def _waiter_enter(self) -> None:
+    def _waiter_enter_locked(self) -> None:
         """Register the current thread as a blocked consumer (lock held).
 
         Keyed by thread ident with a nesting depth: the VOL mux registering
@@ -1121,10 +1124,10 @@ class Channel:
         first = me not in self._waiters
         self._waiters[me] = self._waiters.get(me, 0) + 1
         if first:
-            self._event("consumer", "wait_begin")
+            self._event_locked("consumer", "wait_begin")
             self._lock.notify_all()  # wake a producer doing `latest` rendezvous
 
-    def _waiter_exit(self) -> None:
+    def _waiter_exit_locked(self) -> None:
         """Drop one nesting level; the thread stops counting at depth 0."""
         me = threading.get_ident()
         depth = self._waiters.get(me, 0) - 1
@@ -1132,14 +1135,14 @@ class Channel:
             self._waiters[me] = depth
         else:
             self._waiters.pop(me, None)
-            self._event("consumer", "wait_end")
+            self._event_locked("consumer", "wait_end")
 
     def waiting_consumers(self) -> int:
         """Distinct consumer threads currently counted as blocked here."""
         with self._lock:
             return len(self._waiters)
 
-    def _take(self) -> Tuple[str, Any, int, int, Any]:
+    def _take_locked(self) -> Tuple[str, Any, int, int, Any]:
         """Pop under self._lock (caller holds it) and wake the producer."""
         item = self._queue.popleft()
         self._lock.notify_all()
@@ -1166,7 +1169,7 @@ class Channel:
                     inner, payload_bytes = self._prepare(src)
                     with self._lock:
                         self.stats.prep_retries += 1
-                        self._event("consumer", "prep_retry")
+                        self._event_locked("consumer", "prep_retry")
                 else:
                     # A payload that failed to prepare must not leave the
                     # producer parked forever in the rendezvous wait (the
@@ -1176,7 +1179,7 @@ class Channel:
                     # stop the producer).
                     with self._lock:
                         self._done = True
-                        self._event("consumer", "prepare_error")
+                        self._event_locked("consumer", "prepare_error")
                         self._lock.notify_all()
                     self._notify_listeners()
                     raise fail
@@ -1190,7 +1193,6 @@ class Channel:
                     self.stats.prefetch_misses += 1
                     self.stats.prefetch_blocked_s += blocked
             kind, payload = inner
-        self._event("consumer", "recv")
         if kind == "file":
             f = File.load(payload, mmap=True)
             try:
@@ -1200,6 +1202,7 @@ class Channel:
         else:
             f = payload
         with self._lock:
+            self._event_locked("consumer", "recv")
             if seq > self._delivered_seq:
                 self._delivered_seq = seq
             if self._replay_enabled:
@@ -1220,19 +1223,20 @@ class Channel:
         not wait out its timeout.  Data queued before the failure still
         delivers first.
         """
+        check_blocking("Channel.get")
         t0 = time.monotonic()
         deadline = None if timeout is None else t0 + timeout
         with self._lock:
             if self._interrupt is not None:
                 raise self._interrupt
-            self._waiter_enter()
+            self._waiter_enter_locked()
             try:
                 while (not self._queue and not self._done
                        and self._poison is None and self._interrupt is None):
                     remaining = None if deadline is None else deadline - time.monotonic()
                     if remaining is not None and remaining <= 0:
                         self.stats.consumer_wait_s += time.monotonic() - t0
-                        self._event("consumer", "timeout")
+                        self._event_locked("consumer", "timeout")
                         raise ChannelTimeout(
                             f"{self.name}: no data within {timeout}s")
                     if self._supervisor is not None:
@@ -1247,20 +1251,20 @@ class Channel:
                 if self._interrupt is not None:
                     raise self._interrupt
                 if self._queue:
-                    item = self._take()
+                    item = self._take_locked()
                 elif self._poison is not None:
                     raise self._poison_error_locked()
                 else:
                     return None  # all done
             finally:
-                self._waiter_exit()
+                self._waiter_exit_locked()
         return self._deliver(item)
 
     def _poison_error_locked(self) -> ChannelError:
         """Build the poison-pill exception (caller holds the lock, and
         RAISES the result -- chained to the producer's own error)."""
         task, inst, cause = self._poison
-        self._event("consumer", "poisoned")
+        self._event_locked("consumer", "poisoned")
         err = ChannelError(
             f"{self.name}: producer task {task!r} (instance {inst}) failed "
             f"permanently: {type(cause).__name__}: {cause}",
@@ -1277,7 +1281,7 @@ class Channel:
             if self._interrupt is not None:
                 raise self._interrupt
             if self._queue:
-                item = self._take()
+                item = self._take_locked()
             elif self._poison is not None:
                 raise self._poison_error_locked()
             elif self._done:
@@ -1294,9 +1298,9 @@ class Channel:
         then blocks in ``get`` on the same channel counts once."""
         with self._lock:
             if waiting:
-                self._waiter_enter()
+                self._waiter_enter_locked()
             else:
-                self._waiter_exit()
+                self._waiter_exit_locked()
 
     def peek_pending(self) -> bool:
         with self._lock:

@@ -29,6 +29,7 @@ import traceback
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
+from ..analysis.lockcheck import make_lock
 from . import actions as actions_mod
 from .channel import Channel, PrefetchPool
 from .comm import TaskComm, pop_comm, push_comm
@@ -45,7 +46,7 @@ __all__ = ["Wilkins", "WorkflowReport", "TaskFailure"]
 
 # Monotonic id per Wilkins instance: checkpoint roots are keyed by
 # (driver, run) so two drivers sharing a spill_dir stay isolated.
-_driver_seq_lock = threading.Lock()
+_driver_seq_lock = make_lock("leaf:driver_seq")
 _driver_seq = 0
 
 
@@ -277,7 +278,7 @@ class Wilkins:
         self._run_pool: Optional[PrefetchPool] = None
         self._ck_root = ""
         self._extra_threads: List[threading.Thread] = []
-        self._extra_lock = threading.Lock()
+        self._extra_lock = make_lock("leaf:driver_extra")
         self._spawn_extra: Optional[Callable[[str, int, int], None]] = None
         self._build()
 
@@ -619,21 +620,11 @@ class Wilkins:
                                   nprocs: Optional[int] = None) -> None:
         """Validator for programmatic ``RunSupervisor.rescale`` / YAML-free
         triggers: same structural rules the graph enforces at parse time for
-        declared ``on_failure: {rescale: ...}`` policies."""
-        if task not in self.graph.tasks:
-            raise ValueError(f"rescale: unknown task {task!r}")
-        if nslots is None and nprocs is None:
-            raise ValueError(
-                f"rescale {task!r}: nothing to change -- give nslots "
-                f"and/or nprocs")
-        if nslots is not None and int(nslots) < 1:
-            raise ValueError(
-                f"rescale {task!r}: nslots must be >= 1, got {nslots}")
-        if nprocs is not None and int(nprocs) < 1:
-            raise ValueError(
-                f"rescale {task!r}: nprocs must be >= 1, got {nprocs}")
-        if nslots is not None:
-            self.graph.validate_rescale_target(task)
+        declared ``on_failure: {rescale: ...}`` policies -- one shared
+        implementation in ``analysis.rules``."""
+        from ..analysis import rules
+        rules.validate_rescale_request(self.graph, task,
+                                       nslots=nslots, nprocs=nprocs)
 
     def run(self, timeout: Optional[float] = None,
             faults: Optional[Any] = None) -> WorkflowReport:

@@ -27,6 +27,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import yaml
 
+from ..analysis import rules
 from .datamodel import match_file, match_path
 from .recovery import FailurePolicy
 from .scheduler import SchedulerConfig
@@ -137,145 +138,18 @@ class Edge:
 
 
 def _parse_port(p: Dict[str, Any], task: str = "?") -> Port:
-    dsets = [
-        DsetSpec(
-            name=d["name"],
-            file=int(d.get("file", 0) or 0),
-            memory=int(d.get("memory", 0) or 0) if "memory" in d or "file" in d else 1,
-        )
-        for d in p.get("dsets", [])
-    ]
-    if not dsets:
-        dsets = [DsetSpec(name="*")]
-    qd = int(p.get("queue_depth", 1))
-    if qd < 1:
-        raise ValueError(f"queue_depth must be >= 1, got {qd}")
-    # Flow control is validated HERE, with the task and port named -- by the
-    # time a bad value used to reach FlowControl.from_io_freq (at channel
-    # construction, deep inside the driver) the error no longer said which
-    # YAML line to fix, and a typo'd -2 read like a runtime bug.
-    io_freq = int(p.get("io_freq", 1))
-    if io_freq < -1:
-        raise ValueError(
-            f"task {task!r} port {p['filename']!r}: io_freq {io_freq} is "
-            f"invalid; use 0/1 (all), N>1 (some: every Nth step), or -1 "
-            f"(latest)")
-    # ``redistribute: 1`` or ``redistribute: {axis: A}`` on a consumer inport
-    redist = p.get("redistribute", 0)
-    axis = 0
-    if isinstance(redist, dict):
-        axis = int(redist.get("axis", 0))
-        redist = True
-    else:
-        redist = bool(int(redist or 0))
-    if axis < 0:
-        raise ValueError(f"redistribute axis must be >= 0, got {axis}")
-    # ``prefetch: N`` on a consumer inport: per-edge async-prep depth
-    # (0 = synchronous serve, N >= 1 = at most N in-flight preps per
-    # channel).  YAML booleans pass through untouched so the legacy
-    # ``prefetch: true`` spelling keeps meaning "default depth", not 1.
-    prefetch = p.get("prefetch")
-    if prefetch is not None and not isinstance(prefetch, bool):
-        prefetch = int(prefetch)
-        if prefetch < 0:
-            raise ValueError(
-                f"task {task!r} port {p['filename']!r}: prefetch depth must "
-                f"be >= 0 (0 = sync serve, N = per-edge depth), got {prefetch}")
-    # ``weight: N`` on a consumer inport: this port's DWRR share under the
-    # top-level ``scheduler: {policy: fair}`` arbitration
-    weight = int(p.get("weight", 1))
-    if weight < 1:
-        raise ValueError(
-            f"task {task!r} port {p['filename']!r}: scheduler weight must be "
-            f">= 1, got {weight}")
-    # ``autotune: 1`` / ``autotune: N`` / ``autotune: {min: A, max: B}`` on a
-    # consumer inport: runtime prefetch-depth bounds for the autotuner.
-    # Spellings: 1/true -> default bounds [1, 8]; an int N >= 2 -> [1, N];
-    # a mapping sets both ends.  min >= 1 always (a zero-depth autotuned
-    # edge could park a producer forever on an unpassable semaphore; use
-    # ``prefetch: 0`` to disable prefetch instead).
-    at = p.get("autotune", None)
-    autotune: Optional[Tuple[int, int]] = None
-    if isinstance(at, dict):
-        unknown = set(at) - {"min", "max"}
-        if unknown:
-            raise ValueError(
-                f"task {task!r} port {p['filename']!r}: unknown autotune keys "
-                f"{sorted(unknown)} (expected min, max)")
-        bounds = {}
-        for key, default in (("min", 1), ("max", 8)):
-            val = at.get(key, default)
-            if isinstance(val, bool) or not isinstance(val, int):
-                raise ValueError(
-                    f"task {task!r} port {p['filename']!r}: autotune {key} "
-                    f"must be an integer depth, got {val!r}")
-            bounds[key] = val
-        autotune = (bounds["min"], bounds["max"])
-    elif at is not None and at is not False and at != 0:
-        if at is True or at == 1:
-            autotune = (1, 8)
-        elif isinstance(at, int) and at >= 2:
-            autotune = (1, at)
-        else:
-            raise ValueError(
-                f"task {task!r} port {p['filename']!r}: autotune must be "
-                f"1/true, a max depth >= 2, or {{min, max}}, got {at!r}")
-    if autotune is not None:
-        amin, amax = autotune
-        if amin < 1:
-            raise ValueError(
-                f"task {task!r} port {p['filename']!r}: autotune min must be "
-                f">= 1, got {amin} (use prefetch: 0 to disable prefetch)")
-        if amax < amin:
-            raise ValueError(
-                f"task {task!r} port {p['filename']!r}: autotune bounds must "
-                f"satisfy min <= max, got [{amin}, {amax}]")
-    # ``ownership: 1`` or ``ownership: {axis: A, nranks: K}`` on an outport
-    own = p.get("ownership", 0)
-    own_axis, own_nranks = 0, None
-    if isinstance(own, dict):
-        unknown = set(own) - {"axis", "nranks"}
-        if unknown:
-            raise ValueError(
-                f"port {p['filename']!r}: unknown ownership keys {sorted(unknown)} "
-                f"(expected axis, nranks)")
-        own_axis = int(own.get("axis", 0))
-        if "nranks" in own:
-            own_nranks = int(own["nranks"])
-        own = True
-    else:
-        own = bool(int(own or 0))
-    if own_axis < 0:
-        raise ValueError(
-            f"port {p['filename']!r}: ownership axis must be >= 0, got {own_axis}")
-    if own_nranks is not None and own_nranks < 1:
-        raise ValueError(
-            f"port {p['filename']!r}: ownership nranks must be >= 1, got {own_nranks}")
-    return Port(filename=p["filename"], dsets=dsets,
-                io_freq=io_freq, queue_depth=qd,
-                redistribute=redist, redist_axis=axis, prefetch=prefetch,
-                weight=weight, autotune=autotune,
-                ownership=own, own_axis=own_axis, own_nranks=own_nranks)
+    # All legality rules live in analysis.rules (shared with the offline
+    # analyzer and the driver's programmatic-trigger checks); this wrapper
+    # only owns the dataclasses.
+    kw = rules.validated_port(p, task)
+    kw["dsets"] = [DsetSpec(name=n, file=f, memory=m)
+                   for (n, f, m) in kw["dsets"]]
+    return Port(**kw)
 
 
 def _parse_task(t: Dict[str, Any]) -> TaskSpec:
-    actions = t.get("actions")
-    if actions is not None:
-        if not (isinstance(actions, (list, tuple)) and len(actions) == 2):
-            raise ValueError(f"actions must be [script, function], got {actions!r}")
-        actions = (str(actions[0]), str(actions[1]))
-    stall = t.get("stall_timeout_s")
-    if stall is not None:
-        try:
-            stall = float(stall)
-        except (TypeError, ValueError):
-            raise ValueError(
-                f"task {t['func']!r}: stall_timeout_s must be a number of "
-                f"seconds, got {t['stall_timeout_s']!r}") from None
-        if stall <= 0:
-            raise ValueError(
-                f"task {t['func']!r}: stall_timeout_s must be > 0, got "
-                f"{stall} (omit the key to disable the watchdog)")
+    actions = rules.validated_actions(t.get("actions"))
+    stall = rules.validated_stall_timeout(t)
     spec = TaskSpec(
         func=t["func"],
         nprocs=int(t.get("nprocs", 1)),
@@ -289,55 +163,7 @@ def _parse_task(t: Dict[str, Any]) -> TaskSpec:
         stall_timeout_s=stall,
         raw=dict(t),
     )
-    for p in spec.inports:
-        if p.ownership:
-            raise ValueError(
-                f"task {spec.func!r}: ownership is an outport declaration "
-                f"(inport {p.filename!r} declared it); use redistribute: on "
-                f"inports")
-    for p in spec.inports:
-        if p.autotune is not None and p.prefetch == 0:
-            raise ValueError(
-                f"task {spec.func!r} inport {p.filename!r}: autotune needs "
-                f"prefetch enabled, but the port declares prefetch: 0; drop "
-                f"one of the two")
-    for p in spec.outports:
-        if p.prefetch is not None:
-            raise ValueError(
-                f"task {spec.func!r}: prefetch is an inport declaration "
-                f"(outport {p.filename!r} declared it); it rides the "
-                f"consumer's redistribute port")
-        if p.weight != 1:
-            raise ValueError(
-                f"task {spec.func!r}: weight is an inport declaration "
-                f"(outport {p.filename!r} declared it); the fair scheduler "
-                f"arbitrates consumer edges")
-        if p.autotune is not None:
-            raise ValueError(
-                f"task {spec.func!r}: autotune is an inport declaration "
-                f"(outport {p.filename!r} declared it); depth is a consumer-"
-                f"edge property")
-        if p.own_nranks is not None and p.own_nranks not in (
-                spec.nprocs, spec.io_procs):
-            raise ValueError(
-                f"task {spec.func!r} outport {p.filename!r}: ownership nranks "
-                f"{p.own_nranks} matches neither nprocs={spec.nprocs} nor "
-                f"nwriters={spec.io_procs}")
-    if spec.stall_timeout_s is not None:
-        # The watchdog turns "no heartbeat" into a *policy application*; on
-        # an unmanaged task there is no policy to apply, and restart-on-stall
-        # is rejected too (a stalled-but-alive incarnation would keep serving
-        # into channels its restarted twin also serves -- rescale fences the
-        # old incarnation under a new generation, restart does not).
-        pol = spec.on_failure
-        managed = (pol.kind == "drop"
-                   or (pol.kind == "rescale" and pol.nslots is not None))
-        if not managed:
-            raise ValueError(
-                f"task {spec.func!r}: stall_timeout_s requires a managed "
-                f"on_failure policy that can fence the stalled incarnation "
-                f"-- rescale: {{nslots: N}} or drop: -- but the task "
-                f"declares {pol.kind!r}")
+    rules.check_task(spec)
     return spec
 
 
@@ -346,9 +172,7 @@ class WorkflowGraph:
 
     def __init__(self, tasks: List[TaskSpec],
                  scheduler: Optional[SchedulerConfig] = None):
-        names = [t.func for t in tasks]
-        if len(set(names)) != len(names):
-            raise ValueError(f"duplicate task func names: {names}")
+        rules.check_duplicate_names([t.func for t in tasks])
         self.tasks: Dict[str, TaskSpec] = {t.func: t for t in tasks}
         self.scheduler = scheduler if scheduler is not None else SchedulerConfig()
         self.edges: List[Edge] = self._match()
@@ -365,8 +189,7 @@ class WorkflowGraph:
                 doc = yaml.safe_load(source)
         else:
             doc = source
-        if not isinstance(doc, dict) or "tasks" not in doc:
-            raise ValueError("workflow YAML must have a top-level 'tasks' list")
+        rules.check_workflow_doc(doc)
         return cls([_parse_task(t) for t in doc["tasks"]],
                    scheduler=SchedulerConfig.from_yaml(doc.get("scheduler")))
 
@@ -444,41 +267,9 @@ class WorkflowGraph:
         """Structural rules for resizing ``name``'s instance count; used at
         parse time for declared policies and again by the driver for
         programmatic ``RunSupervisor.rescale(task, nslots=...)`` triggers
-        (which have no YAML to validate)."""
-        t = self.tasks[name]
-        if t.outports:
-            raise ValueError(
-                f"task {name!r}: rescale: {{nslots: ...}} requires a "
-                f"pure consumer (no outports) -- resizing a producer "
-                f"would re-pair every downstream edge's round-robin "
-                f"instance links mid-run; use rescale: {{nprocs: ...}} "
-                f"to resize a producer's logical ranks instead")
-        inbound = self.producers_of(name)
-        if not inbound:
-            raise ValueError(
-                f"task {name!r}: rescale: {{nslots: ...}} declared but "
-                f"no inport edge matched -- an isolated task has no "
-                f"channels to re-partition")
-        for e in inbound:
-            if self.tasks[e.producer].task_count != 1:
-                raise ValueError(
-                    f"task {name!r}: rescale: {{nslots: ...}} requires "
-                    f"every feeding producer to run a single instance, "
-                    f"but {e.producer!r} has taskCount="
-                    f"{self.tasks[e.producer].task_count}")
-            if e.mode != "memory":
-                raise ValueError(
-                    f"task {name!r}: rescale: {{nslots: ...}} requires "
-                    f"memory transport on every inbound edge, but the "
-                    f"edge from {e.producer!r} ({e.filename_pattern!r}) "
-                    f"uses file mode")
-            if e.io_freq == -1:
-                raise ValueError(
-                    f"task {name!r}: rescale: {{nslots: ...}} cannot "
-                    f"combine with io_freq: -1 (latest) on the edge from "
-                    f"{e.producer!r} -- latest-mode step selection "
-                    f"depends on live consumer timing, so the replay "
-                    f"set is not deterministic across sizes")
+        (which have no YAML to validate).  The rules themselves live in
+        ``analysis.rules`` (shared with the offline analyzer)."""
+        rules.validate_rescale_target(self, name)
 
     # ----------------------------------------------------------- utilities
     def producers_of(self, task: str) -> List[Edge]:

@@ -57,6 +57,8 @@ import json
 import os
 import re
 import threading
+
+from ..analysis.lockcheck import check_blocking, make_lock
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -332,7 +334,7 @@ class FaultPlan:
         self.specs: List[FaultSpec] = [
             s if isinstance(s, FaultSpec) else FaultSpec(**s) for s in specs]
         self._fired: Dict[int, int] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("leaf:faults")
         self.log: List[Tuple[str, str, int, str, int, int]] = []
 
     @classmethod
@@ -359,6 +361,7 @@ class FaultPlan:
                                  attempt))
             if spec.kind == "crash":
                 raise InjectedFault(task, instance, point, step, attempt)
+            check_blocking("sleep")
             time.sleep(spec.seconds)  # stall / slow_io
 
     def fired(self) -> int:
@@ -524,7 +527,7 @@ class RecoveryContext:
         self.epoch = 0
         self._ck = None
         self._next_step = 0
-        self._lock = threading.Lock()
+        self._lock = make_lock("leaf:recovery_ctx")
         # set by a rescale when a newer incarnation owns this (task, instance):
         # every later checkpoint/ack/restore from the fenced zombie raises.
         self.superseded = False
@@ -690,7 +693,7 @@ class RunSupervisor:
         self.policies = dict(policies)
         self.channels = list(channels)
         self.faults = faults
-        self._lock = threading.Lock()
+        self._lock = make_lock("supervisor:run")
         self._state: Dict[Tuple[str, int], str] = {}
         self._attempt: Dict[Tuple[str, int], int] = {}
         self._epoch: Dict[Tuple[str, int], int] = {}
@@ -705,7 +708,7 @@ class RunSupervisor:
         self._pending_rescale: Dict[str, RescaleOp] = {}
         self._gen: Dict[str, int] = {}          # bumped per completed rescale
         self._fenced: set = set()               # (task, inst) zombies
-        self._hb_lock = threading.Lock()
+        self._hb_lock = make_lock("supervisor.hb:run")
         self._hb: Dict[Tuple[str, int], Tuple[int, float]] = {}
         self._strikes: Dict[Tuple[str, int], Tuple[int, int]] = {}
         # driver-installed callbacks: surgery executor + rescale validator

@@ -47,6 +47,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..analysis.lockcheck import check_blocking
 from .channel import Channel
 from .datamodel import Dataset, File, Group
 from .recovery import (RecoveryContext, RescaleError, RescaleOp, edge_key,
@@ -76,6 +77,7 @@ def _resolve_items(ch: Channel, items: List[Tuple[str, Any, int, int, Any]]
     for kind, payload, seq, _epoch, src in items:
         if kind == "future":
             try:
+                check_blocking("future.result")
                 (kind, payload), _nbytes = payload.result()
             except BaseException:
                 if src is None:

@@ -55,6 +55,8 @@ from __future__ import annotations
 
 import json
 import threading
+
+from ..analysis.lockcheck import make_condition, make_lock
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -235,7 +237,7 @@ class ResizableSemaphore:
     def __init__(self, value: int):
         if value < 0:
             raise ValueError(f"semaphore value must be >= 0, got {value}")
-        self._cond = threading.Condition()
+        self._cond = make_condition("channel.sem:prefetch")
         self._limit = int(value)
         self._in_use = 0
 
@@ -459,7 +461,7 @@ class TelemetryTimeline:
         if capacity < 0:
             raise ValueError(f"telemetry capacity must be >= 0, got {capacity}")
         self.capacity = int(capacity)
-        self._lock = threading.Lock()
+        self._lock = make_lock("leaf:telemetry")
         self._samples: Deque[Dict[str, Any]] = deque(maxlen=capacity or None)
         self.dropped = 0
         # discrete lifecycle events (task restarts/drops) -- unlike the
@@ -590,8 +592,8 @@ class SchedulerRuntime:
         self.channels = list(channels)
         self.autotuner = DepthAutotuner()
         self.timeline = TelemetryTimeline(config.telemetry)
-        self._lock = threading.Lock()
-        self._tick_lock = threading.Lock()
+        self._lock = make_lock("scheduler:runtime")
+        self._tick_lock = make_lock("scheduler:tick")
         self._steps = 0
         self._ticks = 0
         self._restarts = 0

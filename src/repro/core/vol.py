@@ -27,6 +27,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..analysis.lockcheck import make_lock
 from .channel import NO_DATA, Channel, ChannelMux
 from .datamodel import BlockOwnership, File, compile_file_pattern
 
@@ -101,7 +102,7 @@ class VOL:
         # Serialize serving against the rescale channel swap: a resize of a
         # downstream task replaces entries of ``self.outgoing`` under this
         # lock, so a serve never straddles old and new channel sets.
-        self.serve_lock = threading.Lock()
+        self.serve_lock = make_lock(f"vol.serve:{task}[{instance}]")
 
     # ------------------------------------------------------------ properties
     def set_memory(self, filename_pattern: str, dset_pattern: str = "*") -> None:

@@ -1,0 +1,11 @@
+"""Seeded defect: channel state mutated outside the channel CV."""
+import threading
+
+
+class BadChannel:
+    def __init__(self):
+        self._lock = threading.Condition()
+        self._queue = []
+
+    def offer(self, item):
+        self._queue.append(item)

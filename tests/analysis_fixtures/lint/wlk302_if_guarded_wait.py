@@ -1,0 +1,14 @@
+"""Seeded defect: Condition.wait behind an if, not a while predicate."""
+import threading
+
+
+class BadWaiter:
+    def __init__(self):
+        self._cv = threading.Condition()
+        self.ready = False
+
+    def take(self):
+        with self._cv:
+            if not self.ready:
+                self._cv.wait()
+            return self.ready

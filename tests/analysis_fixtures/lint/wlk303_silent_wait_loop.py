@@ -1,0 +1,11 @@
+"""Seeded defect: a wait loop paced by wait_quantum that never heartbeats."""
+
+
+class BadLoop:
+    def __init__(self, supervisor):
+        self._sup = supervisor
+
+    def drain(self, cv, done):
+        with cv:
+            while not done():
+                cv.wait(self._sup.wait_quantum())

@@ -1,0 +1,11 @@
+"""Seeded defect: a stats counter bumped outside its owning lock."""
+import threading
+
+
+class BadStats:
+    def __init__(self, stats):
+        self._lock = threading.Lock()
+        self.stats = stats
+
+    def bump(self):
+        self.stats.steps += 1

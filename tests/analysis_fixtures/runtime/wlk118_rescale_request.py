@@ -1,0 +1,13 @@
+"""Seeded defect: a programmatic rescale request naming an unknown task."""
+from repro.analysis import rules
+
+
+class _EmptyGraph:
+    tasks = {}
+
+    def producers_of(self, name):
+        return []
+
+
+def trigger():
+    rules.validate_rescale_request(_EmptyGraph(), "ghost", nslots=2)

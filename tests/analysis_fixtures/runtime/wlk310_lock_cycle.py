@@ -1,0 +1,13 @@
+"""Seeded defect: two lock groups acquired in conflicting orders."""
+from repro.analysis.lockcheck import CheckedLock
+
+
+def trigger():
+    a = CheckedLock("alpha:left")
+    b = CheckedLock("beta:right")
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass

@@ -1,0 +1,8 @@
+"""Seeded defect: a known-blocking call entered under a fine-grained lock."""
+from repro.analysis.lockcheck import CheckedLock, check_blocking
+
+
+def trigger():
+    lk = CheckedLock("scheduler:tick")
+    with lk:
+        check_blocking("Channel.get")

@@ -1,0 +1,10 @@
+"""Seeded defect: a serve lock taken while holding a channel CV."""
+from repro.analysis.lockcheck import CheckedCondition, CheckedLock
+
+
+def trigger():
+    cv = CheckedCondition("channel.cv:data")
+    lk = CheckedLock("vol.serve:sim[0]")
+    with cv:
+        with lk:
+            pass

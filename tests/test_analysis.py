@@ -1,0 +1,398 @@
+"""Tier-1 tests for the pre-run analyzers (``repro.analysis``).
+
+Three layers:
+
+* the **seeded-defect corpus** under ``tests/analysis_fixtures/`` -- one
+  fixture per registry code, each asserted to be flagged with the right
+  code anchored at the right task/port (the registry-completeness test
+  makes "new code without a fixture" a test failure);
+* **zero-findings** assertions -- every embedded example workflow and the
+  whole ``src/repro`` tree must come back clean, so the analyzer gates CI
+  without drowning it in noise;
+* the **diagnostics plumbing** -- suppressions (both spellings), renderers,
+  CLI exit codes, and the runtime lock-checker's recorder.
+"""
+
+import glob
+import importlib.util
+import json
+import os
+import re
+import sys
+
+import pytest
+
+from repro.analysis import astlint, lockcheck, rules, workflow
+from repro.analysis.cli import main as cli_main
+from repro.analysis.diagnostics import (Diagnostic, Findings, Location,
+                                        REGISTRY, Severity, line_suppressions)
+from repro.analysis.rules import WorkflowValidationError
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXDIR = os.path.join(HERE, "analysis_fixtures")
+REPO = os.path.dirname(HERE)
+SRC_TREE = os.path.join(REPO, "src", "repro")
+EXAMPLES = sorted(glob.glob(os.path.join(REPO, "examples", "*.py")))
+
+_FIX_RE = re.compile(r"wlk(\d+)")
+
+
+def _fixture_code(path):
+    return "WLK" + _FIX_RE.match(os.path.basename(path)).group(1)
+
+
+def _fixtures(pattern):
+    return sorted(glob.glob(os.path.join(FIXDIR, pattern)))
+
+
+def _expectations(path):
+    """Parse the ``# expect: task=... port=...`` header of a fixture."""
+    with open(path) as f:
+        first = f.readline()
+    out = {}
+    m = re.search(r"#\s*expect:(.*)", first)
+    if m:
+        for kv in m.group(1).split():
+            k, _, v = kv.partition("=")
+            out[k] = v
+    return out
+
+
+def _load_trigger(path):
+    name = "_fixture_" + os.path.splitext(os.path.basename(path))[0]
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod.trigger
+
+
+# ---------------------------------------------------------------------------
+# registry completeness: every code has a seeded-defect fixture
+# ---------------------------------------------------------------------------
+def test_every_registry_code_has_a_fixture():
+    seeded = {_fixture_code(p)
+              for p in _fixtures("wlk*.yaml")
+              + _fixtures(os.path.join("lint", "wlk*.py"))
+              + _fixtures(os.path.join("runtime", "wlk*.py"))}
+    missing = sorted(set(REGISTRY) - seeded)
+    assert not missing, f"registry codes without a seeded fixture: {missing}"
+
+
+def test_every_fixture_names_a_registry_code():
+    for p in (_fixtures("wlk*.yaml")
+              + _fixtures(os.path.join("lint", "wlk*.py"))
+              + _fixtures(os.path.join("runtime", "wlk*.py"))):
+        assert _fixture_code(p) in REGISTRY, p
+
+
+# ---------------------------------------------------------------------------
+# pass 1: workflow-analyzer fixtures (WLK0xx / WLK1xx / WLK2xx)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("path", _fixtures("wlk*.yaml"),
+                         ids=lambda p: os.path.basename(p))
+def test_yaml_fixture_flags_its_code(path):
+    code = _fixture_code(path)
+    findings = workflow.analyze_file(path)
+    hits = [d for d in findings if d.code == code]
+    assert hits, (f"{os.path.basename(path)} expected {code}, got "
+                  f"{[d.code for d in findings]}")
+    d = hits[0]
+    assert d.severity == REGISTRY[code][0]
+    assert d.location.file == path
+    expect = _expectations(path)
+    if "task" in expect:
+        assert d.location.task == expect["task"], d.render()
+    if "port" in expect:
+        assert d.location.port == expect["port"], d.render()
+    if code not in ("WLK002",):  # structure errors may anchor nowhere
+        assert d.location.line is not None, d.render()
+
+
+def test_analyzer_collects_multiple_violations_in_one_pass():
+    # graph.py raises on the FIRST violation; the analyzer must keep going
+    # (collection is per-port: one diagnostic per broken port, plus every
+    # task-level violation)
+    text = """
+tasks:
+  - func: sim
+    outports:
+      - filename: data.h5
+        prefetch: 2
+  - func: viz
+    inports:
+      - filename: data.h5
+        queue_depth: 0
+      - filename: aux.h5
+        weight: 0
+"""
+    codes = sorted(d.code for d in workflow.analyze_source(text))
+    assert codes == ["WLK101", "WLK105", "WLK108"]
+
+
+def test_analyzer_matches_graph_first_error_message():
+    # dedup contract: the analyzer's message for a violation is the exact
+    # string core.graph raises for the same YAML
+    import yaml as _yaml
+    from repro.core.graph import WorkflowGraph
+    text = """
+tasks:
+  - func: viz
+    inports:
+      - filename: data.h5
+        io_freq: -3
+"""
+    with pytest.raises(ValueError) as ei:
+        WorkflowGraph.from_yaml(_yaml.safe_load(text))
+    (d,) = list(workflow.analyze_source(text))
+    assert d.code == "WLK102"
+    assert d.message == str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# pass 2 (static half): AST-lint fixtures (WLK30x)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("path", _fixtures(os.path.join("lint", "wlk*.py")),
+                         ids=lambda p: os.path.basename(p))
+def test_lint_fixture_flags_its_code(path):
+    code = _fixture_code(path)
+    findings = astlint.lint_file(path)
+    hits = [d for d in findings if d.code == code]
+    assert hits, (f"{os.path.basename(path)} expected {code}, got "
+                  f"{[d.code for d in findings]}")
+    assert hits[0].location.file == path
+    assert hits[0].location.line is not None
+
+
+# ---------------------------------------------------------------------------
+# pass 2 (runtime half) + programmatic rules (WLK118, WLK31x)
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def lockcheck_on(monkeypatch):
+    monkeypatch.setenv("WILKINS_LOCKCHECK", "1")
+    lockcheck.registry().reset()
+    yield lockcheck.registry()
+    lockcheck.registry().reset()
+
+
+def test_wlk118_fixture_rejects_bad_rescale_request():
+    trigger = _load_trigger(
+        os.path.join(FIXDIR, "runtime", "wlk118_rescale_request.py"))
+    with pytest.raises(WorkflowValidationError) as ei:
+        trigger()
+    assert ei.value.code == "WLK118"
+
+
+@pytest.mark.parametrize("name,code", [
+    ("wlk310_lock_cycle.py", "WLK310"),
+    ("wlk311_blocking_under_lock.py", "WLK311"),
+    ("wlk312_rank_inversion.py", "WLK312"),
+])
+def test_runtime_fixture_records_its_code(lockcheck_on, name, code):
+    _load_trigger(os.path.join(FIXDIR, "runtime", name))()
+    codes = {d.code for d in lockcheck_on.findings()}
+    assert code in codes, f"{name} expected {code}, recorded {codes}"
+
+
+def test_lockcheck_clean_nesting_records_no_findings(lockcheck_on):
+    # canonical order: serve (10) -> supervisor (20) -> channel CV (30)
+    serve = lockcheck.CheckedLock("vol.serve:sim[0]")
+    sup = lockcheck.CheckedLock("supervisor:run")
+    cv = lockcheck.CheckedCondition("channel.cv:data.h5")
+    with serve:
+        with sup:
+            with cv:
+                pass
+    assert len(lockcheck_on.findings()) == 0
+    lockcheck_on.assert_clean()
+
+
+def test_lockcheck_wait_releases_held_entry(lockcheck_on):
+    # a parked waiter must not count as "holding" its CV: grabbing a
+    # coarser lock from inside wait's predicate re-check is what the
+    # notify path does, and it must not read as an order inversion
+    cv = lockcheck.CheckedCondition("channel.cv:data.h5")
+    with cv:
+        assert lockcheck_on.held() == ["channel.cv:data.h5"]
+        cv.wait(timeout=0.01)
+        assert lockcheck_on.held() == ["channel.cv:data.h5"]
+    assert lockcheck_on.held() == []
+
+
+def test_lockcheck_reentrant_same_object_is_not_a_violation(lockcheck_on):
+    cv = lockcheck.CheckedCondition("channel.cv:data.h5")
+    with cv:
+        with cv:
+            pass
+    assert len(lockcheck_on.findings()) == 0
+
+
+def test_make_lock_returns_plain_primitives_when_disabled(monkeypatch):
+    monkeypatch.delenv("WILKINS_LOCKCHECK", raising=False)
+    import threading
+    assert isinstance(lockcheck.make_lock("leaf:x"), type(threading.Lock()))
+    assert isinstance(lockcheck.make_condition("leaf:x"),
+                      threading.Condition)
+
+
+# ---------------------------------------------------------------------------
+# zero findings over the shipped tree: examples + core
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("path", EXAMPLES,
+                         ids=lambda p: os.path.basename(p))
+def test_example_workflows_are_clean(path):
+    findings = workflow.analyze_file(path)
+    assert len(findings) == 0, "\n" + findings.render_text()
+
+
+def test_examples_embed_workflows():
+    # the zero-findings sweep above is vacuous if discovery breaks
+    assert sum(len(workflow.load_workflows(p)) for p in EXAMPLES) >= 7
+
+
+def test_core_tree_lints_clean():
+    findings = astlint.lint_paths([SRC_TREE])
+    assert len(findings) == 0, "\n" + findings.render_text()
+
+
+# ---------------------------------------------------------------------------
+# diagnostics plumbing: suppressions, renderers, CLI
+# ---------------------------------------------------------------------------
+def test_line_suppression_comment():
+    text = """
+tasks:
+  - func: sim
+    outports:
+      - filename: data.h5
+  - func: viz
+    inports:
+      - filename: data.h5
+        queue_depth: 0   # wilkins: ignore[WLK101]
+"""
+    assert len(workflow.analyze_source(text)) == 0
+
+
+def test_line_suppression_bare_ignores_all_codes():
+    sup = line_suppressions("x: 1  # wilkins: ignore\n")
+    assert sup == {1: None}
+
+
+def test_line_suppression_only_covers_its_line_and_codes():
+    text = """
+tasks:
+  - func: sim
+    outports:
+      - filename: data.h5
+  - func: viz
+    inports:
+      - filename: data.h5
+        queue_depth: 0   # wilkins: ignore[WLK999]
+"""
+    assert [d.code for d in workflow.analyze_source(text)] == ["WLK101"]
+
+
+def test_doc_level_suppression():
+    text = """
+lint:
+  ignore: [WLK204]
+tasks:
+  - func: viz
+    inports:
+      - filename: ghost.h5
+"""
+    assert len(workflow.analyze_source(text)) == 0
+
+
+def test_render_json_shape():
+    f = Findings([Diagnostic("WLK101", "boom",
+                             Location(file="w.yaml", line=3, task="viz",
+                                      port="data.h5"))])
+    doc = json.loads(f.render_json())
+    assert doc["counts"] == {"total": 1, "error": 1, "warning": 0, "info": 0}
+    (d,) = doc["findings"]
+    assert d["code"] == "WLK101"
+    assert d["severity"] == Severity.ERROR
+    assert d["location"] == {"file": "w.yaml", "line": 3, "task": "viz",
+                             "port": "data.h5"}
+
+
+def test_render_text_sorts_errors_first():
+    f = Findings([Diagnostic("WLK224", "info finding"),
+                  Diagnostic("WLK101", "error finding")])
+    lines = f.render_text().splitlines()
+    assert "WLK101" in lines[0]
+    assert lines[-1] == "2 finding(s), 1 error(s)"
+
+
+def test_cli_check_exit_codes(capsys):
+    bad = os.path.join(FIXDIR, "wlk101_queue_depth.yaml")
+    assert cli_main(["check", bad]) == 1
+    assert "WLK101" in capsys.readouterr().out
+    clean = EXAMPLES[0]
+    assert cli_main(["check", clean]) == 0
+
+
+def test_cli_strict_promotes_warnings(capsys):
+    warn = os.path.join(FIXDIR, "wlk204_unmatched_inport.yaml")
+    assert cli_main(["check", warn]) == 0
+    assert cli_main(["check", "--strict", warn]) == 1
+    capsys.readouterr()
+
+
+def test_cli_json_output(capsys):
+    bad = os.path.join(FIXDIR, "wlk101_queue_depth.yaml")
+    assert cli_main(["check", "--json", bad]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["counts"]["error"] == 1
+
+
+def test_cli_lint_subcommand(capsys):
+    fixture = os.path.join(FIXDIR, "lint", "wlk302_if_guarded_wait.py")
+    assert cli_main(["lint", fixture]) == 1
+    assert "WLK302" in capsys.readouterr().out
+    assert cli_main(["lint", SRC_TREE]) == 0
+    capsys.readouterr()
+
+
+def test_cli_codes_lists_registry(capsys):
+    assert cli_main(["codes"]) == 0
+    out = capsys.readouterr().out
+    for code in REGISTRY:
+        assert code in out
+
+
+# ---------------------------------------------------------------------------
+# dedup: graph/driver delegate to the shared rules
+# ---------------------------------------------------------------------------
+def test_graph_errors_carry_diagnostic_codes():
+    import yaml as _yaml
+    from repro.core.graph import WorkflowGraph
+    text = """
+tasks:
+  - func: viz
+    inports:
+      - filename: data.h5
+        weight: 0
+"""
+    with pytest.raises(WorkflowValidationError) as ei:
+        WorkflowGraph.from_yaml(_yaml.safe_load(text))
+    assert ei.value.code == "WLK105"
+    assert ei.value.task == "viz"
+    assert ei.value.port == "data.h5"
+
+
+def test_driver_rescale_request_uses_shared_rules():
+    from repro.core.graph import WorkflowGraph
+    import yaml as _yaml
+    g = WorkflowGraph.from_yaml(_yaml.safe_load("""
+tasks:
+  - func: sim
+    outports:
+      - filename: data.h5
+  - func: viz
+    inports:
+      - filename: data.h5
+"""))
+    with pytest.raises(WorkflowValidationError) as ei:
+        rules.validate_rescale_request(g, "viz")
+    assert ei.value.code == "WLK118"
+    rules.validate_rescale_request(g, "viz", nslots=2)  # legal target

@@ -437,7 +437,7 @@ def test_event_ring_is_bounded_with_drop_counter():
     ch = Channel("e", ("p", 0), ("c", 0), "o.h5", ["/g"],
                  record_events=True, events_maxlen=8)
     for i in range(20):
-        ch._event("producer", f"tick{i}")
+        ch._event_locked("producer", f"tick{i}")
     assert len(ch.stats.events) == 8
     assert ch.stats.events_dropped == 12
     # the ring keeps the NEWEST events (oldest roll off)
