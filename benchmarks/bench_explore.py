@@ -1,0 +1,108 @@
+"""Schedule-explorer benchmark (satellite 5): exploration throughput on
+the clean scenario corpus and time-to-first-bug on the seeded-race
+fixture corpus.
+
+    PYTHONPATH=src python -m benchmarks.bench_explore [--smoke]
+
+Two result families, written to ``BENCH_explore.json``:
+
+* ``corpus`` -- per clean scenario: schedules explored, schedules/sec,
+  whether the bounded frontier was exhausted, and that zero WLK3xx
+  findings surfaced (the same gate CI's ``explore`` job runs);
+* ``races`` -- per seeded fixture: schedules and wall seconds until the
+  re-introduced bug is found, and that its schedule ID replays the same
+  finding (the determinism contract).
+
+Smoke mode trims the clean-corpus budget so the whole stage stays in
+single-digit seconds; the race fixtures always run to discovery (their
+budgets are tiny by construction).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import importlib.util
+import os
+import time
+
+from .common import emit, write_json
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_RACEDIR = os.path.join(_REPO_ROOT, "tests", "analysis_fixtures", "races")
+
+
+def _load_fixture(path):
+    name = "_bench_race_" + os.path.splitext(os.path.basename(path))[0]
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def main(smoke: bool = False):
+    os.environ["WILKINS_EXPLORE"] = "1"
+    from repro.analysis.explore import build_scenario, explore, names, replay
+
+    budget = 256 if smoke else 8000
+    corpus = {}
+    for name in names():
+        t0 = time.monotonic()
+        rep = explore(build_scenario(name), scenario=name,
+                      max_schedules=budget)
+        dt = max(1e-9, time.monotonic() - t0)
+        corpus[name] = {
+            "schedules": rep.schedules,
+            "schedules_per_s": rep.schedules / dt,
+            "complete": bool(rep.complete),
+            "clean": not rep.found,
+            "elapsed_s": dt,
+        }
+        emit(f"explore.{name}.schedules", rep.schedules, "schedules",
+             "clean" if not rep.found else "FOUND")
+        emit(f"explore.{name}.rate", rep.schedules / dt, "schedules/s")
+
+    races = {}
+    for path in sorted(glob.glob(os.path.join(_RACEDIR, "wlk*.py"))):
+        stem = os.path.splitext(os.path.basename(path))[0]
+        mod = _load_fixture(path)
+        t0 = time.monotonic()
+        rep = explore(mod.build, scenario=stem, max_schedules=mod.BUDGET)
+        dt = time.monotonic() - t0
+        found = bool(rep.found and
+                     mod.CODE in {d.code for d in rep.findings})
+        replayed = False
+        if found:
+            again = replay(mod.build, rep.schedule_id)
+            replayed = mod.CODE in {d.code for d in again.findings}
+        races[stem] = {
+            "code": mod.CODE,
+            "budget": mod.BUDGET,
+            "schedules_to_bug": rep.schedules,
+            "time_to_bug_s": dt,
+            "found": found,
+            "replay_reproduces": replayed,
+        }
+        emit(f"explore.{stem}.schedules_to_bug", rep.schedules, "schedules",
+             mod.CODE if found else "MISSED")
+        emit(f"explore.{stem}.time_to_bug", dt, "s")
+
+    results = {
+        "smoke": smoke,
+        "budget": budget,
+        "corpus": corpus,
+        "races": races,
+        "corpus_clean": all(c["clean"] for c in corpus.values()),
+        "all_races_found": all(r["found"] and r["replay_reproduces"]
+                               for r in races.values()),
+    }
+    write_json("explore", results)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    res = main(smoke=ap.parse_args().smoke)
+    raise SystemExit(0 if res["corpus_clean"] and res["all_races_found"]
+                     else 1)

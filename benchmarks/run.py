@@ -15,6 +15,8 @@
   rescale      -> elastic M->N rescale (supervised shrink mid-run: checkpoint
                   re-cut, channel rebuild, replay; byte-exact + surgery
                   latency + overhead vs a same-size restart)
+  explore      -> deterministic schedule explorer (clean-corpus throughput,
+                  time-to-first-bug on the seeded-race fixtures)
   roofline     -> §Roofline table from the dry-run grid (not a paper artifact)
 
 ``--smoke`` is the tier-1 entry point: it first runs the pre-run analyzer
@@ -47,7 +49,8 @@ import time
 import traceback
 
 SUITES = ("overhead", "flowcontrol", "ensembles", "nucleation", "cosmo",
-          "transport", "redistribute", "recovery", "rescale", "roofline")
+          "transport", "redistribute", "recovery", "rescale", "explore",
+          "roofline")
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -132,6 +135,16 @@ def _smoke() -> int:
           f"latency={rsc['rescale_latency_s']:.3f}s "
           f"overhead_vs_restart={rsc['overhead_vs_restart_x']:.2f}x ====",
           flush=True)
+    print("==== smoke: bench_explore ====", flush=True)
+    from . import bench_explore
+    # the explorer flips WILKINS_EXPLORE for its own process; scrub it so
+    # later stages (and reruns) see plain primitives again
+    try:
+        xp = bench_explore.main(smoke=True)
+    finally:
+        os.environ.pop("WILKINS_EXPLORE", None)
+    print(f"==== smoke: explore corpus_clean={xp['corpus_clean']} "
+          f"races_found={xp['all_races_found']} ====", flush=True)
     # gates: M->N shipped-bytes reduction, steady-state plan reuse, aligned
     # zero-copy, the reshard+prefetch pipeline hiding >= 30% of slab-serve
     # time behind consumer compute on the 4->2 edge, the 3-D reshard
@@ -148,7 +161,8 @@ def _smoke() -> int:
           and rec["steps_replayed"] >= 1 and rec["overhead_ok"]
           and rsc["byte_exact"] and rsc["rescales"] == 1
           and rsc["rescales_crash_free"] == 0
-          and rsc["latency_ok"] and rsc["overhead_ok"])
+          and rsc["latency_ok"] and rsc["overhead_ok"]
+          and xp["corpus_clean"] and xp["all_races_found"])
     return 0 if ok else 1
 
 

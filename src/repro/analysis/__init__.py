@@ -1,14 +1,20 @@
 """Pre-run static analysis for Wilkins workflows and the core transport.
 
-Two passes over one diagnostics framework (`analysis.diagnostics`):
+Three passes over one diagnostics framework (`analysis.diagnostics`):
 
 * ``analysis.workflow`` -- the offline workflow-graph analyzer
   (``python -m repro.analysis check workflow.yaml``): deadlock cycles,
-  flow-control hazards, decomposition legality, policy legality.
+  flow-control hazards, decomposition legality, policy legality, and
+  (with dset ``shape:`` hints) reshard-plan coverage (``plancheck``).
 * ``analysis.astlint`` + ``analysis.lockcheck`` -- the concurrency
   checker: an AST lint enforcing the codified lock discipline over
   ``src/repro/core/``, and an opt-in (``WILKINS_LOCKCHECK=1``) runtime
   recorder of the cross-thread lock-acquisition graph.
+* ``analysis.explore`` -- the deterministic schedule explorer +
+  happens-before race detector (``python -m repro.analysis explore``,
+  ``WILKINS_EXPLORE=1``): CHESS-style bounded-preemption enumeration of
+  thread interleavings over the transport/rescale protocols, with
+  replayable schedule IDs for every finding.
 
 ``analysis.rules`` is the shared validation registry ``core.graph`` and
 the driver call into at parse time -- import it (or ``lockcheck``) freely
@@ -21,7 +27,8 @@ from __future__ import annotations
 
 import importlib
 
-__all__ = ["rules", "diagnostics", "workflow", "astlint", "lockcheck", "cli"]
+__all__ = ["rules", "diagnostics", "workflow", "astlint", "lockcheck",
+           "plancheck", "explore", "cli"]
 
 
 def __getattr__(name):

@@ -17,6 +17,13 @@ review memory.  This lint codifies them as checkable rules over
   goes silent gets declared stalled by the watchdog and killed.
 * **WLK304** -- ``stats`` counters are mutated only under a lock (or in
   ``_locked`` helpers); torn increments silently undercount.
+* **WLK305** -- synchronization primitives are constructed through the
+  ``make_lock``/``make_condition``/``make_semaphore`` factories in
+  ``analysis.lockcheck``, never via ``threading.Lock()`` and friends
+  directly: a raw primitive is invisible to the runtime lock-order
+  recorder AND to the schedule explorer, so its interleavings are never
+  checked.  The factories themselves (and the explore-mode fallbacks)
+  carry line suppressions.
 
 Suppress a finding with a ``# wilkins: ignore[WLK30x]`` comment on the
 offending line -- the one legitimate use in-tree (``ChannelMux.wait``'s
@@ -49,6 +56,16 @@ _MUTATORS = frozenset({"append", "appendleft", "pop", "popleft", "clear",
                        "extend", "add", "remove", "discard", "update",
                        "insert"})
 
+#: constructors the make_* factories wrap; Event/Thread/Barrier stay legal
+#: (they are signaling, not mutual exclusion -- nothing for the lock-order
+#: recorder or the explorer to model)
+_RAW_PRIMITIVES = frozenset({"Lock", "RLock", "Condition", "Semaphore",
+                             "BoundedSemaphore"})
+
+_FACTORY_FOR = {"Lock": "make_lock", "RLock": "make_lock",
+                "Condition": "make_condition", "Semaphore": "make_semaphore",
+                "BoundedSemaphore": "make_semaphore"}
+
 
 def _ident(node: ast.AST) -> Optional[str]:
     if isinstance(node, ast.Name):
@@ -80,6 +97,8 @@ class _Linter(ast.NodeVisitor):
         # that own a lock -- a single-threaded queue or a local stats dict
         # has no lock to hold
         self._class_owns_lock: List[bool] = []
+        # local aliases bound by ``from threading import Lock [as L]``
+        self._threading_aliases: dict = {}
 
     # ------------------------------------------------------------- helpers
     def _exempt(self) -> bool:
@@ -141,7 +160,33 @@ class _Linter(ast.NodeVisitor):
                 "but never calls heartbeat -- a parked-but-alive waiter "
                 "will be declared stalled by the watchdog", node)
 
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.module == "threading":
+            for alias in node.names:
+                if alias.name in _RAW_PRIMITIVES:
+                    self._threading_aliases[alias.asname or alias.name] = \
+                        alias.name
+        self.generic_visit(node)
+
+    def _check_raw_primitive(self, node: ast.Call) -> None:
+        f = node.func
+        prim = None
+        if isinstance(f, ast.Attribute) and f.attr in _RAW_PRIMITIVES \
+                and isinstance(f.value, ast.Name) \
+                and f.value.id == "threading":
+            prim = f.attr
+        elif isinstance(f, ast.Name) and f.id in self._threading_aliases:
+            prim = self._threading_aliases[f.id]
+        if prim is not None:
+            self._add(
+                "WLK305",
+                f"direct threading.{prim}() construction -- use "
+                f"analysis.lockcheck.{_FACTORY_FOR[prim]}(name) so the "
+                f"lock-order recorder and the schedule explorer can see "
+                f"this primitive", node)
+
     def visit_Call(self, node: ast.Call) -> None:
+        self._check_raw_primitive(node)
         f = node.func
         if isinstance(f, ast.Attribute):
             # WLK302: cv.wait(...) outside a while loop

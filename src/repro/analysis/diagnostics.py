@@ -103,6 +103,9 @@ REGISTRY: Dict[str, tuple] = {
     "WLK223": (Severity.WARNING, "nwriters exceeds nprocs"),
     "WLK224": (Severity.INFO, "shape not divisible by the decomposition "
                               "rank count (uneven blocks)"),
+    "WLK225": (Severity.ERROR, "reshard plan does not cover every "
+                               "destination element exactly once"),
+    "WLK226": (Severity.ERROR, "reshard plan slab box out of bounds"),
     # ---- concurrency: AST lint over core/ --------------------------------
     "WLK301": (Severity.ERROR, "channel state mutated outside the channel "
                                "condition variable"),
@@ -112,12 +115,23 @@ REGISTRY: Dict[str, tuple] = {
                                  "heartbeat"),
     "WLK304": (Severity.ERROR, "stats counter mutated outside its owning "
                                "lock"),
+    "WLK305": (Severity.ERROR, "direct threading primitive construction in "
+                               "core (use the make_* factories)"),
     # ---- concurrency: runtime lock checker (WILKINS_LOCKCHECK=1) ---------
     "WLK310": (Severity.ERROR, "lock-acquisition cycle (potential "
                                "deadlock)"),
     "WLK311": (Severity.ERROR, "blocking call while holding a lock"),
     "WLK312": (Severity.WARNING, "locks acquired against the canonical "
                                  "rank order"),
+    # ---- concurrency: schedule explorer (WILKINS_EXPLORE=1) --------------
+    "WLK320": (Severity.ERROR, "data race: unordered accesses to a shared "
+                               "buffer, at least one a write"),
+    "WLK321": (Severity.ERROR, "deadlock or timed-wait livelock under an "
+                               "explored schedule"),
+    "WLK322": (Severity.ERROR, "lost wakeup: waiter parked with no live "
+                               "notifier"),
+    "WLK323": (Severity.ERROR, "scenario invariant failed under an "
+                               "explored schedule"),
 }
 
 

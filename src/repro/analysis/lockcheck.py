@@ -43,7 +43,9 @@ from typing import Any, Dict, List, Optional, Set, Tuple
 
 from .diagnostics import Diagnostic, Findings, Location
 
-__all__ = ["enabled", "make_lock", "make_condition", "check_blocking",
+__all__ = ["enabled", "explore_enabled", "make_lock", "make_condition",
+           "make_semaphore", "check_blocking", "sched_point", "hb_publish",
+           "hb_consume", "set_explore_controller", "explore_controller",
            "registry", "LockCheckRegistry", "RANK_FINE", "RANKS"]
 
 #: canonical rank bands (outermost = smallest); see module docstring
@@ -73,6 +75,72 @@ def enabled() -> bool:
     return os.environ.get("WILKINS_LOCKCHECK", "") not in ("", "0")
 
 
+def explore_enabled() -> bool:
+    """Pass 3 (``analysis.explore``): the deterministic schedule explorer.
+
+    When ``WILKINS_EXPLORE=1`` the factories hand out *cooperative* model
+    primitives that serialize every managed thread onto a single
+    runnable-at-a-time token (see ``analysis/explore/control.py``); outside
+    an active exploration they delegate to plain ``threading`` primitives,
+    so merely having the env var set never changes production behaviour.
+    """
+    return os.environ.get("WILKINS_EXPLORE", "") not in ("", "0")
+
+
+# The active schedule-exploration controller.  ``None`` (the default, and
+# always the case unless WILKINS_EXPLORE=1 *and* an exploration is running)
+# makes every hook below a single global-load + ``is None`` test -- the
+# whole instrumentation budget on the production hot path.
+_EXPLORE_CONTROLLER: Optional[Any] = None
+
+
+def set_explore_controller(controller: Optional[Any]) -> Optional[Any]:
+    """Install (or clear, with ``None``) the active explore controller;
+    returns the previous one so nested use can restore it."""
+    global _EXPLORE_CONTROLLER
+    prev = _EXPLORE_CONTROLLER
+    _EXPLORE_CONTROLLER = controller
+    return prev
+
+
+def explore_controller() -> Optional[Any]:
+    return _EXPLORE_CONTROLLER
+
+
+def sched_point(tag: str, key: Any = None, access: Optional[str] = None) -> None:
+    """An explicit scheduler yield point (no-op unless exploring).
+
+    Core code marks the windows that matter to the transport/rescale
+    protocols -- the unlocked gap in ``Channel.offer``, the share re-read in
+    ``Dataset._acquire_share``, the rescale surgery steps -- so the explorer
+    can preempt exactly there.  ``key`` identifies the object the operation
+    touches (dependence relation for sleep-set pruning); ``access`` of
+    ``"r"``/``"w"`` additionally records a shadow-state data access at
+    ``key`` for the happens-before race detector (WLK320).
+    """
+    c = _EXPLORE_CONTROLLER
+    if c is not None:
+        c.sched_point(tag, key=key, access=access)
+
+
+def hb_publish(key: Any) -> None:
+    """Stamp a happens-before *publish* edge at ``key`` (channel offer,
+    CoW share hand-off): the publisher's vector clock is merged into the
+    key's clock so a later ``hb_consume`` is ordered after it.  No-op
+    unless exploring."""
+    c = _EXPLORE_CONTROLLER
+    if c is not None:
+        c.hb_publish(key)
+
+
+def hb_consume(key: Any) -> None:
+    """Join the clock published at ``key`` into the consuming thread
+    (channel get / delivery).  No-op unless exploring."""
+    c = _EXPLORE_CONTROLLER
+    if c is not None:
+        c.hb_consume(key)
+
+
 def rank_of(name: str) -> int:
     """Rank from a lock name: the prefix before ``:`` keys into RANKS."""
     return RANKS.get(name.split(":", 1)[0], RANKS["leaf"])
@@ -83,7 +151,7 @@ class LockCheckRegistry:
     graph, rank violations, and blocking-under-lock events."""
 
     def __init__(self):
-        self._mu = threading.Lock()
+        self._mu = threading.Lock()  # wilkins: ignore[WLK305] -- checker internals
         self._held = threading.local()
         # (outer_prefix, inner_prefix) -> one example (outer, inner, thread)
         self.edges: Dict[Tuple[str, str], Tuple[str, str, str]] = {}
@@ -221,7 +289,7 @@ class CheckedLock:
     def __init__(self, name: str):
         self.name = name
         self.rank = rank_of(name)
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()  # wilkins: ignore[WLK305] -- the wrapped primitive
 
     def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
         got = self._lock.acquire(blocking, timeout)
@@ -255,7 +323,7 @@ class CheckedCondition:
     def __init__(self, name: str):
         self.name = name
         self.rank = rank_of(name)
-        self._cond = threading.Condition()
+        self._cond = threading.Condition()  # wilkins: ignore[WLK305] -- the wrapped primitive
 
     # -- lock surface
     def acquire(self, *args) -> bool:
@@ -304,15 +372,36 @@ class CheckedCondition:
 # ---------------------------------------------------------------------------
 # factories + the blocking-site hook
 # ---------------------------------------------------------------------------
+# Factory precedence: explore > lockcheck > plain.  The explore wrappers are
+# imported lazily (only when WILKINS_EXPLORE=1) so the common path never pays
+# the import and there is no lockcheck <-> explore import cycle.
 def make_lock(name: str) -> Any:
-    """A ``threading.Lock`` -- checked and named when WILKINS_LOCKCHECK=1."""
-    return CheckedLock(name) if enabled() else threading.Lock()
+    """A ``threading.Lock`` -- checked when WILKINS_LOCKCHECK=1, a
+    cooperative model lock when WILKINS_EXPLORE=1."""
+    if explore_enabled():
+        from .explore.instrument import ExploreLock
+        return ExploreLock(name)
+    return CheckedLock(name) if enabled() else threading.Lock()  # wilkins: ignore[WLK305] -- the factory itself
 
 
 def make_condition(name: str) -> Any:
     """A ``threading.Condition`` -- checked and named when
-    WILKINS_LOCKCHECK=1."""
-    return CheckedCondition(name) if enabled() else threading.Condition()
+    WILKINS_LOCKCHECK=1, a cooperative model CV when WILKINS_EXPLORE=1."""
+    if explore_enabled():
+        from .explore.instrument import ExploreCondition
+        return ExploreCondition(name)
+    return CheckedCondition(name) if enabled() else threading.Condition()  # wilkins: ignore[WLK305] -- the factory itself
+
+
+def make_semaphore(name: str, value: int = 1) -> Any:
+    """A ``threading.Semaphore`` -- a cooperative model semaphore when
+    WILKINS_EXPLORE=1.  Lockcheck has no semaphore discipline to enforce
+    (semaphores carry no canonical rank), so the lockcheck path stays
+    plain; the name still matters to the explorer's dependence relation."""
+    if explore_enabled():
+        from .explore.instrument import ExploreSemaphore
+        return ExploreSemaphore(name, value)
+    return threading.Semaphore(value)  # wilkins: ignore[WLK305] -- the factory itself
 
 
 def check_blocking(what: str) -> None:

@@ -33,7 +33,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import yaml
 
-from . import rules
+from . import plancheck, rules
 from .diagnostics import Diagnostic, Findings, Location, line_suppressions
 from .rules import WorkflowValidationError
 
@@ -550,3 +550,18 @@ def _check_decomposition(graph, add, ploc) -> None:
                             f"kernel pads each tile_rows*{inner} tile to "
                             f"128 lanes",
                             line=line, task=name, port=port.filename)
+                    # WLK225/226: prove the compiled reshard plan for this
+                    # edge covers every destination element exactly once
+                    # and never indexes out of bounds (plancheck)
+                    if side == "inports" and port.redistribute:
+                        for e in graph.producers_of(name):
+                            if e.filename_pattern != port.filename:
+                                continue
+                            src_n = graph.tasks[e.producer].io_procs
+                            for d in plancheck.verify_edge(
+                                    shape, axis, src_n, nranks,
+                                    context=(f"edge {e.producer}->{name}:"
+                                             f"{port.filename} dataset "
+                                             f"{dname!r}")):
+                                add(d.code, d.message, line=line,
+                                    task=name, port=port.filename)

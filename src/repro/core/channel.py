@@ -47,7 +47,8 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple, 
 
 import numpy as np
 
-from ..analysis.lockcheck import check_blocking, make_condition, make_lock
+from ..analysis.lockcheck import (check_blocking, hb_consume, hb_publish,
+                                  make_condition, make_lock, sched_point)
 from .datamodel import (BlockOwnership, File, compile_file_pattern,
                         compile_path_pattern, transport_stats)
 from .redistribute import RedistSpec, plan_cache
@@ -599,6 +600,7 @@ class Channel:
         ones, and rewind the serve/flow-control counters to the last ack so
         the replayed closes line up.  Waiters are woken to re-rendezvous
         against the new epoch."""
+        sched_point("Channel.quarantine_producer", key=("chan", id(self)))
         with self._lock:
             kept: Deque[Tuple[str, Any, int, int, Any]] = deque()
             for item in self._queue:
@@ -620,6 +622,7 @@ class Channel:
         the last ack, so the restarted consumer replays exactly the steps it
         had not checkpointed.  A producer blocked in ``offer`` keeps waiting
         for ring space and re-rendezvouses with the new incarnation."""
+        sched_point("Channel.quarantine_consumer", key=("chan", id(self)))
         with self._lock:
             if self._replay:
                 for item in reversed(self._replay):
@@ -664,6 +667,7 @@ class Channel:
         Used by the rescale protocol to stop sibling instances at a step
         boundary; not an error path -- queued data stays queued and is
         re-cut for the new partition."""
+        sched_point("Channel.interrupt_consumer", key=("chan", id(self)))
         with self._lock:
             self._interrupt = exc
             self._event_locked("consumer", "interrupt")
@@ -674,6 +678,7 @@ class Channel:
         """Retire-side grace: complete any blocked ``offer`` immediately
         (the ring may transiently exceed ``queue_depth``) so the feeding
         producer drains out of its rendezvous before the channel swap."""
+        sched_point("Channel.rescale_release_producer", key=("chan", id(self)))
         with self._lock:
             self._grace = True
             self._event_locked("producer", "rescale_grace")
@@ -685,6 +690,7 @@ class Channel:
         retention ring (acked), the replay buffer (delivered, unacked) and
         the queue (undelivered).  Items may still be payload *futures*; the
         caller resolves them outside this lock."""
+        sched_point("Channel.rescale_snapshot", key=("chan", id(self)))
         with self._lock:
             return {
                 "serve_seq": self._serve_seq,
@@ -707,6 +713,7 @@ class Channel:
         not restart), the consumer-side watermark rewinds to the consistent
         cut so the preloaded replay delivers, and the epoch is bumped past
         every retired incarnation."""
+        sched_point("Channel.rescale_adopt", key=("chan", id(self)))
         with self._lock:
             self._serve_seq = serve_seq
             self._acked_seq = acked_seq
@@ -722,6 +729,7 @@ class Channel:
         """Queue one re-partitioned replay payload on an adopted channel
         (bypasses flow control: the seq was already assigned -- and any
         some/latest skipping already applied -- on the retired edge)."""
+        sched_point("Channel.rescale_preload", key=("chan", id(self)))
         with self._lock:
             self._queue.append(("memory", payload, seq, self._epoch, None))
             self.stats.replayed += 1
@@ -955,6 +963,10 @@ class Channel:
             # runtime via set_depth, also under this lock
             depth = self.prefetch
 
+        # THE unlocked window of the serve protocol: between the flow-control
+        # decision above and the enqueue below, a quarantine/rescale/abandon
+        # can land -- the explorer preempts here
+        sched_point("Channel.offer:prepare", key=("chan", id(self)))
         # keep the source File only when prep retry may need it (recovery
         # runs): retry re-filters from the producer's CoW tree at delivery
         src = f if (depth and self._prep_retry) else None
@@ -1006,6 +1018,9 @@ class Channel:
             if self._done:
                 return False
             self._queue.append(item)
+            # HB edge half 1 (offer -> get): the consumer that pops seq
+            # joins this clock in _take_locked
+            hb_publish(("chan", id(self), seq))
             self.stats.served += 1
             if payload_bytes is not None:
                 self.stats.bytes_moved += payload_bytes
@@ -1143,8 +1158,21 @@ class Channel:
             return len(self._waiters)
 
     def _take_locked(self) -> Tuple[str, Any, int, int, Any]:
-        """Pop under self._lock (caller holds it) and wake the producer."""
+        """Pop under self._lock (caller holds it) and wake the producer.
+
+        The dedup watermark advances HERE, at pop time, not at the end of
+        ``_deliver``: delivery runs outside the lock (future result, file
+        load), and a producer quarantine+replay landing in that window
+        would re-serve a step the consumer has already taken -- the
+        replayed serve passes the offer-side ``seq <= _delivered_seq``
+        check against the stale watermark and the step delivers twice
+        (found by the schedule explorer on the crash_replay scenario).
+        ``quarantine_consumer`` still rewinds the watermark to the last
+        consumer ack, so consumer-restart replay is unaffected."""
         item = self._queue.popleft()
+        if item[2] > self._delivered_seq:
+            self._delivered_seq = item[2]
+        hb_consume(("chan", id(self), item[2]))  # HB edge half 2 (offer -> get)
         self._lock.notify_all()
         return item
 
@@ -1224,6 +1252,7 @@ class Channel:
         delivers first.
         """
         check_blocking("Channel.get")
+        sched_point("Channel.get", key=("chan", id(self)))
         t0 = time.monotonic()
         deadline = None if timeout is None else t0 + timeout
         with self._lock:

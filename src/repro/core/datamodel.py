@@ -50,6 +50,9 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..analysis import lockcheck as _lc
+from ..analysis.lockcheck import make_lock, sched_point
+
 __all__ = [
     "Dataset",
     "Group",
@@ -104,7 +107,7 @@ class TransportStats:
     """
 
     def __init__(self) -> None:
-        self._lock = threading.Lock()
+        self._lock = make_lock("leaf:transport_stats")
         self.copies = 0
         self.bytes_copied = 0
         self.cow_copies = 0
@@ -322,6 +325,29 @@ class BlockOwnership:
         return len(self.blocks)
 
 
+def _buffer_key(arr: Any) -> int:
+    """Stable identity of the underlying memory for the race detector:
+    views of the same allocation map to the same key (walk the ``.base``
+    chain, take the data pointer), so a slab view and its source dataset
+    are recognized as touching one buffer."""
+    base = arr
+    while isinstance(base, np.ndarray) and base.base is not None:
+        base = base.base
+    try:
+        return base.__array_interface__["data"][0]
+    except (AttributeError, TypeError, KeyError):
+        return id(base)
+
+
+def _race_point(tag: str, arr: Any, mode: str) -> None:
+    """Shadow-state access for the explorer's happens-before checker.
+
+    Gated on the raw controller global so the disabled path never walks
+    the buffer's base chain -- one module-attribute load and a None test."""
+    if _lc._EXPLORE_CONTROLLER is not None:
+        sched_point(tag, key=("buf", _buffer_key(arr)), access=mode)
+
+
 class _Share:
     """Refcount for an ndarray buffer shared across CoW dataset views.
 
@@ -336,7 +362,7 @@ class _Share:
 
     def __init__(self, count: int = 1):
         self.count = count
-        self.lock = threading.Lock()
+        self.lock = make_lock("leaf:share")
 
 
 class Dataset:
@@ -401,6 +427,10 @@ class Dataset:
         that actually guards the buffer we alias."""
         while True:
             share = self._share
+            # the torn-capture window (PR 3): a writer may swap the share
+            # between this read and the lock below -- the identity re-check
+            # restarts; the yield point lets the explorer preempt HERE
+            sched_point("Dataset._acquire_share", key=("share", id(share)))
             with share.lock:
                 if share is self._share:
                     share.count += 1
@@ -462,6 +492,7 @@ class Dataset:
         always lands in a private host copy)."""
         while True:
             share = self._share
+            sched_point("Dataset._ensure_writable", key=("share", id(share)))
             with share.lock:
                 if share is not self._share:
                     continue  # a concurrent writer swapped us; re-read
@@ -492,6 +523,7 @@ class Dataset:
 
     def __setitem__(self, key, value) -> None:
         self._ensure_writable()
+        _race_point("Dataset.__setitem__", self._data, "w")
         self._data[key] = value
 
     def read_direct(self) -> np.ndarray:
@@ -503,6 +535,7 @@ class Dataset:
         """
         if is_device_array(self._data):
             return self._data
+        _race_point("Dataset.read_direct", self._data, "r")
         if self._is_exclusive():
             return self._data
         alias = self._data.view()
@@ -520,6 +553,7 @@ class Dataset:
 
     def write_slab(self, starts: Sequence[int], block: np.ndarray) -> None:
         self._ensure_writable()
+        _race_point("Dataset.write_slab", self._data, "w")
         slc = tuple(slice(s, s + n) for s, n in zip(starts, block.shape))
         self._data[slc] = block
 

@@ -58,7 +58,7 @@ import os
 import re
 import threading
 
-from ..analysis.lockcheck import check_blocking, make_lock
+from ..analysis.lockcheck import check_blocking, make_lock, sched_point
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
@@ -781,6 +781,9 @@ class RunSupervisor:
             epoch = self._epoch[key]
             self._state[key] = TaskState.RESTARTING
         incoming, outgoing = self._instance_channels(task, instance)
+        # the restart window: counters are updated but no queue surgery has
+        # happened yet -- the explorer preempts between the two
+        sched_point("RunSupervisor.quarantine", key=("restart", task, instance))
         for ch in outgoing:
             ch.quarantine_producer(epoch)
         for ch in incoming:

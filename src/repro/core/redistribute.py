@@ -44,6 +44,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..analysis.lockcheck import make_lock
 from .datamodel import BlockOwnership, Dataset
 
 __all__ = [
@@ -270,7 +271,7 @@ class CompiledPlan:
             sum(t.nbytes_factor for t in self.transfers) * self.dtype.itemsize
         )
         self._pack_cache: Dict[Tuple[int, int, str, int], Tuple[np.ndarray, Tuple[Tuple[int, int], ...]]] = {}
-        self._pack_lock = threading.Lock()
+        self._pack_lock = make_lock("leaf:pack_cache")
         self._pack_geom = self._compute_pack_geometry()
 
     # ------------------------------------------------------------- executors
@@ -631,7 +632,7 @@ class PlanCache:
 
     def __init__(self, maxsize: int = 256):
         self.maxsize = int(maxsize)
-        self._lock = threading.Lock()
+        self._lock = make_lock("leaf:plan_cache")
         self._plans: "OrderedDict[Tuple, CompiledPlan]" = OrderedDict()
         self.hits = 0
         self.misses = 0

@@ -47,7 +47,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..analysis.lockcheck import check_blocking
+from ..analysis.lockcheck import check_blocking, sched_point
 from .channel import Channel
 from .datamodel import Dataset, File, Group
 from .recovery import (RecoveryContext, RescaleError, RescaleOp, edge_key,
@@ -298,6 +298,9 @@ def _execute(driver: Any, sup: Any, op: RescaleOp) -> None:
     # holds its serve lock, so this order is what makes them acquirable.
     for ch in old_chs:
         ch.rescale_release_producer()
+    # the grace-to-lock window: producers drain out of their rendezvous
+    # while the leader has not yet taken the serve locks
+    sched_point("rescale.grace_to_lock", key=("rescale", task))
     producers = sorted({ch.producer for ch in old_chs})
     held: List[Any] = []
     try:

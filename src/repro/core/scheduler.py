@@ -234,10 +234,10 @@ class ResizableSemaphore:
     both directions).
     """
 
-    def __init__(self, value: int):
+    def __init__(self, value: int, name: str = "channel.sem:prefetch"):
         if value < 0:
             raise ValueError(f"semaphore value must be >= 0, got {value}")
-        self._cond = make_condition("channel.sem:prefetch")
+        self._cond = make_condition(name)
         self._limit = int(value)
         self._in_use = 0
 

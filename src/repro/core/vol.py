@@ -27,7 +27,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from ..analysis.lockcheck import make_lock
+from ..analysis.lockcheck import make_lock, sched_point
 from .channel import NO_DATA, Channel, ChannelMux
 from .datamodel import BlockOwnership, File, compile_file_pattern
 
@@ -188,6 +188,7 @@ class VOL:
         they intentionally miss each other's cache entries.
         """
         n = 0
+        sched_point("VOL.serve_all", key=("vol", id(self)))
         with self.serve_lock:
             for f in list(self._unserved):
                 payload_cache: Dict[Any, File] = {}

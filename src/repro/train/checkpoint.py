@@ -32,6 +32,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from ..analysis.lockcheck import make_lock
+
 __all__ = ["save_pytree", "load_pytree", "load_pytree_flat",
            "AsyncCheckpointer", "restore_latest"]
 
@@ -111,7 +113,7 @@ class AsyncCheckpointer:
         self.dir = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
-        self._lock = threading.Lock()
+        self._lock = make_lock("leaf:ckpt")
         self._inflight: Optional[threading.Thread] = None
         # a failed background write (disk full, permission flip) used to die
         # silently on its daemon thread -- callers kept "checkpointing" into

@@ -1,0 +1,17 @@
+# expect: code=WLK305
+"""Seeded lint defect: synchronization primitives constructed directly
+from ``threading`` instead of through the ``analysis.lockcheck``
+factories -- invisible to both the runtime lock-order recorder and the
+schedule explorer."""
+
+import threading
+from threading import Condition, Semaphore as Sem
+
+
+class BadChannel:
+    def __init__(self):
+        self._lock = threading.Lock()          # WLK305: qualified call
+        self._cond = Condition()               # WLK305: from-import
+        self._sem = Sem(4)                     # WLK305: aliased from-import
+        self._rw = threading.RLock()           # WLK305: RLock too
+        self._done = threading.Event()         # fine: Event is signaling

@@ -1,0 +1,19 @@
+# expect: code=WLK225
+"""Seeded plan defect: a compiled reshard plan with one transfer dropped,
+leaving a destination-rank hole the executor would fill with stale bytes.
+
+``trigger`` returns the verifier's findings (unlike the lockcheck
+fixtures it needs no recorder -- plancheck is a pure function)."""
+
+from repro.analysis import plancheck
+from repro.core.redistribute import CompiledPlan, even_blocks
+
+
+def trigger():
+    shape = (12, 8)
+    plan = CompiledPlan(even_blocks(shape, 3), even_blocks(shape, 2), shape)
+    # corrupt: dst rank 0 loses its transfer from src rank 1
+    per_dst = list(plan.per_dst)
+    per_dst[0] = tuple(t for t in per_dst[0] if t.src_rank != 1)
+    object.__setattr__(plan, "per_dst", tuple(per_dst))
+    return plancheck.verify_plan(plan, context="seeded coverage hole")

@@ -1,0 +1,21 @@
+# expect: code=WLK226
+"""Seeded plan defect: a transfer slab box shifted past the dataset's
+global extent -- the executor would index out of bounds (or silently
+wrap a negative start)."""
+
+import dataclasses
+
+from repro.analysis import plancheck
+from repro.core.redistribute import CompiledPlan, even_blocks
+
+
+def trigger():
+    shape = (12, 8)
+    plan = CompiledPlan(even_blocks(shape, 2), even_blocks(shape, 2), shape)
+    # corrupt: shift dst rank 1's transfer one row past the extent
+    bad = dataclasses.replace(
+        plan.per_dst[1][0],
+        global_starts=(shape[0] - plan.per_dst[1][0].shape[0] + 1, 0))
+    per_dst = (plan.per_dst[0], (bad,) + plan.per_dst[1][1:])
+    object.__setattr__(plan, "per_dst", per_dst)
+    return plancheck.verify_plan(plan, context="seeded bounds escape")

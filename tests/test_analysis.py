@@ -73,7 +73,8 @@ def test_every_registry_code_has_a_fixture():
     seeded = {_fixture_code(p)
               for p in _fixtures("wlk*.yaml")
               + _fixtures(os.path.join("lint", "wlk*.py"))
-              + _fixtures(os.path.join("runtime", "wlk*.py"))}
+              + _fixtures(os.path.join("runtime", "wlk*.py"))
+              + _fixtures(os.path.join("races", "wlk*.py"))}
     missing = sorted(set(REGISTRY) - seeded)
     assert not missing, f"registry codes without a seeded fixture: {missing}"
 
@@ -81,7 +82,8 @@ def test_every_registry_code_has_a_fixture():
 def test_every_fixture_names_a_registry_code():
     for p in (_fixtures("wlk*.yaml")
               + _fixtures(os.path.join("lint", "wlk*.py"))
-              + _fixtures(os.path.join("runtime", "wlk*.py"))):
+              + _fixtures(os.path.join("runtime", "wlk*.py"))
+              + _fixtures(os.path.join("races", "wlk*.py"))):
         assert _fixture_code(p) in REGISTRY, p
 
 

@@ -1,0 +1,260 @@
+"""Tier-1 tests for Pass 3: the deterministic schedule explorer +
+happens-before race detector (``repro.analysis.explore``).
+
+Four layers:
+
+* the **clean corpus** -- bounded exploration over every scenario in
+  ``explore.scenarios.CORPUS`` completes with zero WLK3xx findings
+  (the same gate the CI ``explore`` job runs);
+* the **seeded-race corpus** under ``tests/analysis_fixtures/races/`` --
+  each historical bug re-introduced must be FOUND within its declared
+  schedule budget, with the right code, and its schedule ID must replay
+  the finding deterministically;
+* the **ResizableSemaphore audit** regression -- the correct resize
+  survives exploration, a variant with the grow-notify dropped is caught
+  as a lost wakeup;
+* the **zero-cost contract** -- with ``WILKINS_EXPLORE`` unset the
+  factories hand out plain ``threading`` primitives and the explorer
+  hooks are no-ops.
+"""
+
+import glob
+import importlib.util
+import os
+import threading
+
+import pytest
+
+from repro.analysis import lockcheck
+from repro.analysis.cli import main as cli_main
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+RACEDIR = os.path.join(HERE, "analysis_fixtures", "races")
+RACE_FIXTURES = sorted(glob.glob(os.path.join(RACEDIR, "wlk*.py")))
+
+
+@pytest.fixture
+def explore_on(monkeypatch):
+    monkeypatch.setenv("WILKINS_EXPLORE", "1")
+    monkeypatch.delenv("WILKINS_LOCKCHECK", raising=False)
+
+
+def _load(path):
+    name = "_race_" + os.path.splitext(os.path.basename(path))[0]
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _codes(findings):
+    return {d.code for d in findings}
+
+
+# ---------------------------------------------------------------------------
+# clean corpus: bounded exploration, zero findings
+# ---------------------------------------------------------------------------
+def _corpus_names():
+    from repro.analysis.explore import names
+    return names()
+
+
+@pytest.mark.parametrize("name", _corpus_names())
+def test_clean_scenario_explores_without_findings(explore_on, name):
+    from repro.analysis.explore import build_scenario, explore
+    # largest measured tree (sem_resize) is ~3.7k schedules; 4000 lets
+    # every scenario exhaust its frontier rather than stop at the cap
+    rep = explore(build_scenario(name), scenario=name, max_schedules=4000)
+    assert not rep.found, "\n" + rep.findings.render_text()
+    assert rep.schedules > 1, "exploration degenerated to one schedule"
+    assert rep.complete, f"{name} did not exhaust {rep.schedules} schedules"
+
+
+# ---------------------------------------------------------------------------
+# seeded races: every historical bug is re-found within budget
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("path", RACE_FIXTURES,
+                         ids=lambda p: os.path.basename(p))
+def test_race_fixture_found_within_budget(explore_on, path):
+    from repro.analysis.explore import explore, replay
+    mod = _load(path)
+    stem = os.path.splitext(os.path.basename(path))[0]
+    rep = explore(mod.build, scenario=stem, max_schedules=mod.BUDGET)
+    assert rep.found, (f"{stem}: seeded bug not found in {rep.schedules} "
+                       f"schedules (budget {mod.BUDGET})")
+    assert mod.CODE in _codes(rep.findings), \
+        f"{stem}: expected {mod.CODE}, got {sorted(_codes(rep.findings))}"
+    assert rep.schedule_id, "finding carries no replayable schedule ID"
+    assert rep.schedule_id.startswith(stem + "@")
+
+    # the schedule ID replays the same finding, deterministically
+    first = replay(mod.build, rep.schedule_id)
+    again = replay(mod.build, rep.schedule_id)
+    assert mod.CODE in _codes(first.findings), \
+        f"replay lost the finding: {sorted(_codes(first.findings))}"
+    assert sorted(d.code for d in first.findings) == \
+        sorted(d.code for d in again.findings)
+    assert first.decisions == again.decisions
+
+
+@pytest.mark.parametrize("path", RACE_FIXTURES,
+                         ids=lambda p: os.path.basename(p))
+def test_race_fixture_discovery_is_deterministic(explore_on, path):
+    from repro.analysis.explore import explore
+    mod = _load(path)
+    stem = os.path.splitext(os.path.basename(path))[0]
+    a = explore(mod.build, scenario=stem, max_schedules=mod.BUDGET)
+    b = explore(mod.build, scenario=stem, max_schedules=mod.BUDGET)
+    assert a.schedule_id == b.schedule_id
+    assert a.schedules == b.schedules
+
+
+def test_race_finding_carries_both_stacks(explore_on):
+    from repro.analysis.explore import explore
+    mod = _load(os.path.join(RACEDIR, "wlk320_torn_stats.py"))
+    rep = explore(mod.build, scenario="torn_stats", max_schedules=16)
+    (d,) = [d for d in rep.findings if d.code == "WLK320"]
+    # the message names both racing threads and where each accessed
+    assert "producer" in d.message and "drainer" in d.message
+    assert "wlk320_torn_stats" in d.message
+
+
+# ---------------------------------------------------------------------------
+# ResizableSemaphore audit regression (satellite 3)
+# ---------------------------------------------------------------------------
+def _sem_grow_scenario(sem_cls):
+    def build():
+        sem = sem_cls(1, name="channel.sem:audit")
+
+        def holder():
+            assert sem.acquire()
+            # holds its slot to the end: only the resize can free the peer
+
+        def blocked():
+            assert sem.acquire(), "acquire after grow returned False"
+            sem.release()
+
+        def resizer():
+            sem.resize(2)
+
+        return [("holder", holder), ("blocked", blocked),
+                ("resizer", resizer)]
+    return build
+
+
+def test_semaphore_resize_grow_wakes_waiters(explore_on):
+    from repro.analysis.explore import explore
+    from repro.core.scheduler import ResizableSemaphore
+    rep = explore(_sem_grow_scenario(ResizableSemaphore),
+                  scenario="sem_grow", max_schedules=128)
+    assert not rep.found, "\n" + rep.findings.render_text()
+    assert rep.complete
+
+
+def test_semaphore_resize_without_notify_is_caught(explore_on):
+    from repro.analysis.explore import explore
+    from repro.core.scheduler import ResizableSemaphore
+
+    class _SilentGrow(ResizableSemaphore):
+        # the exact hazard the audit checked for: growing the limit
+        # without waking blocked acquirers
+        def resize(self, limit):
+            with self._cond:
+                self._limit = int(limit)
+
+    rep = explore(_sem_grow_scenario(_SilentGrow),
+                  scenario="sem_grow_silent", max_schedules=128)
+    assert rep.found, "silent grow was not caught"
+    assert "WLK322" in _codes(rep.findings), sorted(_codes(rep.findings))
+
+
+def test_resizable_semaphore_shrink_races_release_real_threads():
+    # the audited interleaving on REAL threads: shrink below the in-use
+    # count while holders release concurrently; nobody may deadlock,
+    # over-release, or leave the gauge nonzero
+    from repro.core.scheduler import ResizableSemaphore
+    sem = ResizableSemaphore(8, name="channel.sem:stress")
+    errs = []
+
+    def worker():
+        try:
+            for _ in range(200):
+                assert sem.acquire(timeout=10.0)
+                sem.release()
+        except BaseException as e:   # noqa: BLE001 -- surface to the test
+            errs.append(e)
+
+    def resizer():
+        try:
+            for limit in (4, 1, 6, 2, 8) * 40:
+                sem.resize(limit)
+        except BaseException as e:
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    threads.append(threading.Thread(target=resizer))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert not any(t.is_alive() for t in threads), "stress run wedged"
+    assert not errs, errs
+    assert sem.in_use == 0
+    assert sem.limit == 8
+    assert sem.acquire(timeout=1.0)
+    sem.release()
+
+
+# ---------------------------------------------------------------------------
+# CLI surface
+# ---------------------------------------------------------------------------
+def test_cli_explore_clean_scenario(explore_on, capsys):
+    assert cli_main(["explore", "--scenario", "latest_fanin"]) == 0
+    out = capsys.readouterr().out
+    assert "latest_fanin" in out and "clean" in out
+
+
+def test_cli_explore_list(explore_on, capsys):
+    assert cli_main(["explore", "--list"]) == 0
+    assert "rendezvous_depth1" in capsys.readouterr().out
+
+
+def test_cli_explore_json(explore_on, capsys):
+    import json
+    assert cli_main(["explore", "--json", "--scenario", "cow_share",
+                     "--budget", "32"]) == 0
+    (doc,) = [d for d in json.loads(capsys.readouterr().out)]
+    assert doc["scenario"] == "cow_share"
+    assert doc["found"] is False
+
+
+# ---------------------------------------------------------------------------
+# zero-cost contract: WILKINS_EXPLORE unset -> plain primitives, no-ops
+# ---------------------------------------------------------------------------
+def test_factories_plain_when_explore_unset(monkeypatch):
+    monkeypatch.delenv("WILKINS_EXPLORE", raising=False)
+    monkeypatch.delenv("WILKINS_LOCKCHECK", raising=False)
+    assert isinstance(lockcheck.make_lock("leaf:x"), type(threading.Lock()))
+    assert isinstance(lockcheck.make_condition("leaf:x"),
+                      threading.Condition)
+    assert isinstance(lockcheck.make_semaphore("leaf:x", 2),
+                      threading.Semaphore)
+    # the hooks are no-ops with no controller installed
+    lockcheck.sched_point("noop", key=("x", 0), access="w")
+    lockcheck.hb_publish(("x", 1))
+    lockcheck.hb_consume(("x", 1))
+
+
+def test_explore_primitives_fall_back_off_scenario(explore_on):
+    # WILKINS_EXPLORE=1 but no controller running: the wrappers must
+    # behave as real primitives on unmanaged threads
+    lk = lockcheck.make_lock("leaf:x")
+    with lk:
+        assert lk.locked()
+    assert not lk.locked()
+    cv = lockcheck.make_condition("leaf:x")
+    with cv:
+        assert not cv.wait(timeout=0.01)
+    sem = lockcheck.make_semaphore("leaf:x", 1)
+    assert sem.acquire()
+    sem.release()
