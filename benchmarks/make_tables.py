@@ -108,6 +108,40 @@ def scheduler_table():
                   f"| {d['reason']} |")
 
 
+def obs_table():
+    """Render BENCH_obs.json (the span-tracing overhead bench): tracing
+    cost on/off plus the critical-path attribution's per-edge rollup."""
+    candidates = [os.path.join(os.environ.get("BENCH_DIR", "."),
+                               "BENCH_obs.json"),
+                  os.path.join(REPO_ROOT, "BENCH_obs.json")]
+    path = next((p for p in candidates if os.path.exists(p)), None)
+    if path is None:
+        return
+    with open(path) as f:
+        doc = json.load(f)
+    print("\n## Observability (span-tracing bench)\n")
+    print("| baseline s | traced s | overhead | zero-cost off | spans "
+          "| layers | attribution |")
+    print("|---:|---:|---:|---|---:|---|---|")
+    att = ("consistent" if doc.get("attribution_sums_ok")
+           else "INCONSISTENT")
+    print(f"| {doc['baseline_s']:.3f} | {doc['traced_s']:.3f} "
+          f"| {doc['overhead_x']:.3f}x "
+          f"| {'yes' if doc.get('zero_cost_ok') else 'NO'} "
+          f"| {doc.get('trace_spans', 0)} "
+          f"| {','.join(doc.get('layers', []))} | {att} |")
+    edges = doc.get("edges", {})
+    if edges:
+        print(f"\ncritical instance: `{doc.get('critical')}`\n")
+        print("| edge | blocked s | prep s | MiB | plan hits | misses |")
+        print("|---|---:|---:|---:|---:|---:|")
+        for edge, row in sorted(edges.items()):
+            print(f"| {edge} | {row['blocked_s']:.4f} "
+                  f"| {row['prep_s']:.4f} "
+                  f"| {row['bytes'] / 2**20:.2f} | {row['hits']} "
+                  f"| {row['misses']} |")
+
+
 def main():
     rows = load_all()
     print("## Baseline roofline grid\n")
@@ -115,6 +149,7 @@ def main():
     print("\n## Variant (hillclimb) cells\n")
     variants_table(rows)
     scheduler_table()
+    obs_table()
 
 
 if __name__ == "__main__":

@@ -17,6 +17,8 @@
                   latency + overhead vs a same-size restart)
   explore      -> deterministic schedule explorer (clean-corpus throughput,
                   time-to-first-bug on the seeded-race fixtures)
+  obs          -> span-tracing overhead (zero-cost off, <= 5% on) and
+                  critical-path attribution consistency
   roofline     -> §Roofline table from the dry-run grid (not a paper artifact)
 
 ``--smoke`` is the tier-1 entry point: it first runs the pre-run analyzer
@@ -29,8 +31,10 @@ reduction >= 2x, plan-cache hit rate >= 0.9, zero aligned-path copies,
 prefetch overlap >= 0.30, a byte-exact 3-D reshard on the flattened
 pack-kernel path, the autotuned disparate-rate run's consumer blocked_s at
 or below the static-depth baseline, a telemetry JSON round trip, a
-byte-exact mid-run crash recovery with bounded overhead, and a byte-exact
-elastic 2->1 rescale with bounded surgery latency).
+byte-exact mid-run crash recovery with bounded overhead, a byte-exact
+elastic 2->1 rescale with bounded surgery latency, and the span-tracing
+overhead gate: zero-cost when off, <= 5% wall when on, attribution
+buckets summing to each instance's window).
 ``WILKINS_SMOKE_SKIP_PYTEST=1`` skips the pytest stage (CI runs the suite
 as its own fast/slow job steps).
 
@@ -50,7 +54,7 @@ import traceback
 
 SUITES = ("overhead", "flowcontrol", "ensembles", "nucleation", "cosmo",
           "transport", "redistribute", "recovery", "rescale", "explore",
-          "roofline")
+          "obs", "roofline")
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -145,6 +149,14 @@ def _smoke() -> int:
         os.environ.pop("WILKINS_EXPLORE", None)
     print(f"==== smoke: explore corpus_clean={xp['corpus_clean']} "
           f"races_found={xp['all_races_found']} ====", flush=True)
+    print("==== smoke: bench_obs ====", flush=True)
+    from . import bench_obs
+    ob = bench_obs.main(smoke=True)
+    print(f"==== smoke: obs overhead={ob['overhead_x']:.3f}x "
+          f"zero_cost={ob['zero_cost_ok']} spans={ob['trace_spans']} "
+          f"layers={len(ob['layers'])} "
+          f"attribution_ok={ob['attribution_nonempty'] and ob['attribution_sums_ok']} "
+          f"====", flush=True)
     # gates: M->N shipped-bytes reduction, steady-state plan reuse, aligned
     # zero-copy, the reshard+prefetch pipeline hiding >= 30% of slab-serve
     # time behind consumer compute on the 4->2 edge, the 3-D reshard
@@ -162,7 +174,8 @@ def _smoke() -> int:
           and rsc["byte_exact"] and rsc["rescales"] == 1
           and rsc["rescales_crash_free"] == 0
           and rsc["latency_ok"] and rsc["overhead_ok"]
-          and xp["corpus_clean"] and xp["all_races_found"])
+          and xp["corpus_clean"] and xp["all_races_found"]
+          and ob["ok"])
     return 0 if ok else 1
 
 

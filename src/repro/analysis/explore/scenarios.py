@@ -180,6 +180,45 @@ def rescale_window() -> Sequence[Tuple[str, Callable[[], None]]]:
             ("consumer", consumer)]
 
 
+def traced_rendezvous() -> Sequence[Tuple[str, Callable[[], None]]]:
+    """The depth-1 rendezvous with a ``SpanRecorder`` attached (PR 10):
+    tracing hooks run inside ``offer``/``get`` while the channel lock is
+    held, so exploration must show the obs shard locks introduce no new
+    races or lock-order edges (they are ``leaf`` rank, innermost), and
+    every delivered step must leave exactly one offer + one get span."""
+    from ...obs.recorder import SpanRecorder, TraceConfig
+    ch = _mk_channel(io_freq=1, queue_depth=1)
+    rec = SpanRecorder(TraceConfig(shards=2, flight_len=32))
+    ch.set_tracer(rec)
+    got: List[int] = []
+
+    def producer():
+        for step in range(3):
+            assert ch.offer(_mk_file(step)), f"serve of step {step} refused"
+        ch.finish()
+
+    def consumer():
+        while True:
+            f = ch.get()
+            if f is None:
+                break
+            got.append(_payload_value(f))
+        assert got == [0, 1, 2], f"lost/duplicated/reordered delivery: {got}"
+        spans = rec.spans()
+        offers = [s for s in spans if s["name"] == "channel.offer"
+                  and not (s["args"] or {}).get("aborted")]
+        gets = [s for s in spans if s["name"] == "channel.get"
+                and not (s["args"] or {}).get("aborted")]
+        assert len(offers) == 3 and len(gets) == 3, \
+            f"span count mismatch: {len(offers)} offers, {len(gets)} gets"
+        assert all(s["flow"][0] == "s" for s in offers) and \
+               all(s["flow"][0] == "f" for s in gets) and \
+               {s["flow"][1] for s in offers} == {g["flow"][1] for g in gets}, \
+            "offer/get flow ids do not pair up"
+
+    return [("producer", producer), ("consumer", consumer)]
+
+
 def sem_resize() -> Sequence[Tuple[str, Callable[[], None]]]:
     """``ResizableSemaphore.resize`` shrink racing a concurrent
     ``release`` (satellite audit): the in-use gauge must return to zero,
@@ -236,6 +275,7 @@ CORPUS: Dict[str, Callable[[], Sequence[Tuple[str, Callable[[], None]]]]] = {
     "rendezvous_depth1": rendezvous_depth1,
     "latest_fanin": latest_fanin,
     "crash_replay": crash_replay,
+    "traced_rendezvous": traced_rendezvous,
     "rescale_window": rescale_window,
     "sem_resize": sem_resize,
     "cow_share": cow_share,

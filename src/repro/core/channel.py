@@ -49,6 +49,7 @@ import numpy as np
 
 from ..analysis.lockcheck import (check_blocking, hb_consume, hb_publish,
                                   make_condition, make_lock, sched_point)
+from ..obs.recorder import flow_id
 from .datamodel import (BlockOwnership, File, compile_file_pattern,
                         compile_path_pattern, transport_stats)
 from .redistribute import RedistSpec, plan_cache
@@ -104,6 +105,31 @@ class _NoData:
 
 
 NO_DATA = _NoData()
+
+
+# --- nested-wait accounting guard (satellite: counter consistency) ----------
+# The VOL mux loop accounts its whole multiplexed wait into the channel that
+# finally delivers; a ``get()`` on one of those same channels issued INSIDE
+# that scope (e.g. from an ``after_file_open`` callback) must not add its own
+# wait to ``consumer_wait_s`` again.  The scope is per-thread and nestable.
+_MUX_WAIT_SCOPE = threading.local()
+
+
+def enter_mux_wait_scope(channels: Sequence["Channel"]) -> frozenset:
+    """Mark ``channels`` as wait-accounted by the caller; returns the token
+    to pass to :func:`exit_mux_wait_scope` (the previous scope)."""
+    prev = getattr(_MUX_WAIT_SCOPE, "ids", frozenset())
+    _MUX_WAIT_SCOPE.ids = prev | frozenset(id(c) for c in channels)
+    return prev
+
+
+def exit_mux_wait_scope(token: frozenset) -> None:
+    """Restore the previous scope (idempotent: tokens nest)."""
+    _MUX_WAIT_SCOPE.ids = token
+
+
+def _in_mux_wait_scope(ch: "Channel") -> bool:
+    return id(ch) in getattr(_MUX_WAIT_SCOPE, "ids", frozenset())
 
 
 class FlowControl:
@@ -493,6 +519,7 @@ class Channel:
         self._retention = False
         self._retained: Deque[Tuple[str, Any, int, int, Any]] = deque()
         self._supervisor: Optional[Any] = None  # RunSupervisor (fault hook)
+        self._tracer: Optional[Any] = None      # obs.SpanRecorder (run-scoped)
         # Waiter accounting for the `latest` rendezvous decision: one entry
         # per *distinct consumer thread* currently blocked on this channel,
         # with a nesting depth so a thread registered by the VOL mux
@@ -516,6 +543,33 @@ class Channel:
         """Attach the run-scoped prefetch pool (driver-owned); ``None``
         detaches and falls back to the lazy module default."""
         self._prefetch_pool = pool
+
+    def set_tracer(self, tracer: Optional[Any]) -> None:
+        """Attach the run's ``SpanRecorder`` (None = untraced: every hook
+        site below is a single attribute load + None test)."""
+        self._tracer = tracer
+
+    def stats_snapshot(self) -> Dict[str, Any]:
+        """Point-in-time scalar counters, read under the owning lock --
+        the error-report path must never see a half-updated struct (same
+        discipline astlint WLK30x enforces on the happy-path mutations)."""
+        with self._lock:
+            s = self.stats
+            return {
+                "served": s.served, "dropped": s.dropped,
+                "bytes_moved": s.bytes_moved,
+                "producer_wait_s": s.producer_wait_s,
+                "consumer_wait_s": s.consumer_wait_s,
+                "prefetch_hits": s.prefetch_hits,
+                "prefetch_misses": s.prefetch_misses,
+                "prefetch_cancelled": s.prefetch_cancelled,
+                "prefetch_prepared_s": s.prefetch_prepared_s,
+                "prefetch_blocked_s": s.prefetch_blocked_s,
+                "inflight_preps": s.inflight_preps,
+                "deduped": s.deduped, "replayed": s.replayed,
+                "prep_retries": s.prep_retries,
+                "events_dropped": s.events_dropped,
+            }
 
     # ----------------------------------------------------------- recovery
     def set_supervisor(self, sup: Optional[Any]) -> None:
@@ -613,6 +667,10 @@ class Channel:
             self._close_count = self._acked_close_count
             self._epoch = max(self._epoch, epoch)
             self._event_locked("producer", f"quarantine:epoch={epoch}")
+            if self._tracer is not None:
+                self._tracer.instant("recovery", "channel.quarantine_producer",
+                                     self.producer[0], self.producer[1],
+                                     edge=self.name, epoch=epoch)
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -632,6 +690,10 @@ class Channel:
             self._delivered_seq = self._acked_delivered_seq
             self._epoch = max(self._epoch, epoch)
             self._event_locked("consumer", f"quarantine:epoch={epoch}")
+            if self._tracer is not None:
+                self._tracer.instant("recovery", "channel.quarantine_consumer",
+                                     self.consumer[0], self.consumer[1],
+                                     edge=self.name, epoch=epoch)
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -643,6 +705,10 @@ class Channel:
         with self._lock:
             self._poison = (task, instance, error)
             self._event_locked("producer", "poison")
+            if self._tracer is not None:
+                self._tracer.instant("recovery", "channel.poison", task,
+                                     instance, edge=self.name,
+                                     error=type(error).__name__)
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -671,6 +737,10 @@ class Channel:
         with self._lock:
             self._interrupt = exc
             self._event_locked("consumer", "interrupt")
+            if self._tracer is not None:
+                self._tracer.instant("rescale", "channel.interrupt",
+                                     self.consumer[0], self.consumer[1],
+                                     edge=self.name)
             self._lock.notify_all()
         self._notify_listeners()
 
@@ -782,6 +852,10 @@ class Channel:
             self.stats.inflight_preps -= 1
             if cancelled:
                 self.stats.prefetch_cancelled += 1
+            inflight = self.stats.inflight_preps
+        tr = self._tracer
+        if tr is not None:
+            tr.counter(f"inflight:{self.name}", inflight)
         if cancelled:
             transport_stats().record_prefetch_cancelled()
 
@@ -984,6 +1058,9 @@ class Channel:
                 raise
             with self._lock:
                 self.stats.inflight_preps += 1
+                inflight = self.stats.inflight_preps
+            if self._tracer is not None:
+                self._tracer.counter(f"inflight:{self.name}", inflight)
             # release the slot + close the gauge on completion, error, or
             # cancel alike (shutdown AND the `latest` stale-prep drop)
             fut.add_done_callback(self._on_prep_done)
@@ -1010,12 +1087,22 @@ class Channel:
                         timeout=self._supervisor.wait_quantum(self.producer[0]))
                 else:
                     self._lock.wait()
-            self.stats.producer_wait_s += time.monotonic() - t0
+            now = time.monotonic()
+            self.stats.producer_wait_s += now - t0
             self._event_locked("producer", "wait_end")
+            tr = self._tracer
             if self._abandoned:
+                if tr is not None:
+                    tr.record("channel", "channel.offer", self.producer[0],
+                              self.producer[1], t0, now, step=step,
+                              edge=self.name, aborted=True)
                 self._discard_item_locked(item)
                 return False
             if self._done:
+                if tr is not None:
+                    tr.record("channel", "channel.offer", self.producer[0],
+                              self.producer[1], t0, now, step=step,
+                              edge=self.name, aborted=True)
                 return False
             self._queue.append(item)
             # HB edge half 1 (offer -> get): the consumer that pops seq
@@ -1025,6 +1112,11 @@ class Channel:
             if payload_bytes is not None:
                 self.stats.bytes_moved += payload_bytes
             self._event_locked("producer", "serve")
+            if tr is not None:
+                tr.record("channel", "channel.offer", self.producer[0],
+                          self.producer[1], t0, now, step=step,
+                          flow=("s", flow_id(self.name, seq)), edge=self.name)
+                tr.counter(f"qdepth:{self.name}", len(self._queue), t=now)
             self._lock.notify_all()
         self._notify_listeners()
         return True
@@ -1079,6 +1171,13 @@ class Channel:
         transport_stats().record_prefetch_prepare(dt)
         with self._lock:
             self.stats.prefetch_prepared_s += dt
+        tr = self._tracer
+        if tr is not None:
+            # pool workers get their own pseudo-process track: overlapping
+            # preps must not stack onto a task instance's timeline
+            tr.record("prefetch", "prefetch.prep", "pool",
+                      threading.get_ident() & 0xF, t0, t0 + dt, step=step,
+                      edge=self.name, bytes=payload_bytes)
         return item, payload_bytes
 
     def _prepare(
@@ -1220,6 +1319,14 @@ class Channel:
                 else:
                     self.stats.prefetch_misses += 1
                     self.stats.prefetch_blocked_s += blocked
+            tr = self._tracer
+            if tr is not None:
+                # zero-length on a hit: still carries the cache verdict and
+                # the payload bytes for the per-edge rollup
+                tr.record("prefetch", "prefetch.wait", self.consumer[0],
+                          self.consumer[1], t0, t0 + blocked, edge=self.name,
+                          cache="hit" if hit else "miss",
+                          bytes=payload_bytes)
             kind, payload = inner
         if kind == "file":
             f = File.load(payload, mmap=True)
@@ -1264,8 +1371,14 @@ class Channel:
                        and self._poison is None and self._interrupt is None):
                     remaining = None if deadline is None else deadline - time.monotonic()
                     if remaining is not None and remaining <= 0:
-                        self.stats.consumer_wait_s += time.monotonic() - t0
+                        if not _in_mux_wait_scope(self):
+                            self.stats.consumer_wait_s += time.monotonic() - t0
                         self._event_locked("consumer", "timeout")
+                        if self._tracer is not None:
+                            self._tracer.record(
+                                "channel", "channel.get", self.consumer[0],
+                                self.consumer[1], t0, time.monotonic(),
+                                edge=self.name, aborted=True, why="timeout")
                         raise ChannelTimeout(
                             f"{self.name}: no data within {timeout}s")
                     if self._supervisor is not None:
@@ -1276,12 +1389,30 @@ class Channel:
                         remaining = q if remaining is None else min(
                             remaining, q)
                     self._lock.wait(timeout=remaining)
-                self.stats.consumer_wait_s += time.monotonic() - t0
+                now = time.monotonic()
+                if not _in_mux_wait_scope(self):
+                    self.stats.consumer_wait_s += now - t0
+                tr = self._tracer
                 if self._interrupt is not None:
+                    if tr is not None:
+                        tr.record("channel", "channel.get", self.consumer[0],
+                                  self.consumer[1], t0, now, edge=self.name,
+                                  aborted=True, why="interrupt")
                     raise self._interrupt
                 if self._queue:
                     item = self._take_locked()
+                    if tr is not None:
+                        tr.record("channel", "channel.get", self.consumer[0],
+                                  self.consumer[1], t0, now,
+                                  flow=("f", flow_id(self.name, item[2])),
+                                  edge=self.name)
+                        tr.counter(f"qdepth:{self.name}",
+                                   len(self._queue), t=now)
                 elif self._poison is not None:
+                    if tr is not None:
+                        tr.record("channel", "channel.get", self.consumer[0],
+                                  self.consumer[1], t0, now, edge=self.name,
+                                  aborted=True, why="poison")
                     raise self._poison_error_locked()
                 else:
                     return None  # all done

@@ -29,6 +29,7 @@ from the process-wide ``PlanCache``.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -61,6 +62,9 @@ class TaskComm:
     # the RunSupervisor itself (driver-wired alongside ``recovery``): the
     # programmatic rescale trigger below routes through it
     supervisor: Any = None
+    # per-run SpanRecorder (driver-wired on traced runs): checkpoint /
+    # restore / reshard below report themselves as spans when present
+    tracer: Any = None
 
     def is_io_proc(self, rank: Optional[int] = None) -> bool:
         r = self.rank if rank is None else rank
@@ -147,8 +151,16 @@ class TaskComm:
         DESIGN.md for the cadence/overhead trade."""
         if self.recovery is None:
             return None
-        return self.recovery.checkpoint(state, step=step, block=block,
-                                        sharded_axes=sharded_axes)
+        if self.tracer is None:
+            return self.recovery.checkpoint(state, step=step, block=block,
+                                            sharded_axes=sharded_axes)
+        t0 = time.monotonic()
+        out = self.recovery.checkpoint(state, step=step, block=block,
+                                       sharded_axes=sharded_axes)
+        self.tracer.record("checkpoint", "ckpt.save", self.task,
+                           self.instance, t0, time.monotonic(), step=out,
+                           blocking=block)
+        return out
 
     def rescale(self, task: Optional[str] = None, *,
                 nslots: Optional[int] = None,
@@ -175,7 +187,15 @@ class TaskComm:
         on load)."""
         if self.recovery is None:
             return None
-        return self.recovery.restore(like)
+        if self.tracer is None:
+            return self.recovery.restore(like)
+        t0 = time.monotonic()
+        out = self.recovery.restore(like)
+        self.tracer.record("checkpoint", "ckpt.restore", self.task,
+                           self.instance, t0, time.monotonic(),
+                           step=out[0] if out is not None else None,
+                           fresh=out is None)
+        return out
 
     # ------------------------------------------------------------- reshard
     def resolve_redist_spec(self, spec: Any = None, port: Optional[str] = None):
@@ -294,7 +314,12 @@ class TaskComm:
         if bad:
             raise ValueError(f"dst ranks {bad} out of range for the "
                              f"{len(dst)}-block decomposition of {rspec}")
-        plan = plan_cache().get(src_boxes, dst, gshape, arr.dtype)
+        pc = plan_cache()
+        hits0 = pc.hits  # plan-cache verdict for the reshard span (traced
+        cache = None     # runs only; racy across threads, advisory only)
+        plan = pc.get(src_boxes, dst, gshape, arr.dtype)
+        if self.tracer is not None:
+            cache = "hit" if pc.hits > hits0 else "miss"
 
         if slab_box is not None:
             # an instance reshards what it was shipped: every wanted dst box
@@ -333,15 +358,25 @@ class TaskComm:
                 f"pack_mode={plan.pack_mode!r}, slab={slab_box!r})")
         from .datamodel import transport_stats
         transport_stats().record_reshard(pack=can_pack)
+        tr = self.tracer
+        t0 = time.monotonic()
         if can_pack:
-            return execute_pack_jax_all(plan, arr, tile_rows=tile_rows,
-                                        slab_box=slab_box, ranks=wanted)
-
-        np_arr = np.asarray(arr)
-        if slab_box is not None:
-            # scatter straight out of the slab (src_boxes == [slab_box])
-            return plan.execute([np_arr], ranks=wanted)
-        return plan.execute_global(np_arr, ranks=wanted)
+            out = execute_pack_jax_all(plan, arr, tile_rows=tile_rows,
+                                       slab_box=slab_box, ranks=wanted)
+        else:
+            np_arr = np.asarray(arr)
+            if slab_box is not None:
+                # scatter straight out of the slab (src_boxes == [slab_box])
+                out = plan.execute([np_arr], ranks=wanted)
+            else:
+                out = plan.execute_global(np_arr, ranks=wanted)
+        if tr is not None:
+            tr.record("reshard",
+                      "reshard.pack" if can_pack else "reshard.numpy",
+                      self.task, self.instance, t0, time.monotonic(),
+                      bytes=int(arr.nbytes), cache=cache,
+                      ranks=len(wanted))
+        return out
 
 
 def world() -> TaskComm:

@@ -30,6 +30,9 @@ from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..analysis.lockcheck import make_lock
+from ..obs.critical import attribute, format_report
+from ..obs.export import export_trace
+from ..obs.recorder import SpanRecorder, TraceConfig
 from . import actions as actions_mod
 from .channel import Channel, PrefetchPool
 from .comm import TaskComm, pop_comm, push_comm
@@ -96,6 +99,14 @@ class WorkflowReport:
     # the action the policy took)
     rescales: List[Dict[str, Any]] = field(default_factory=list)
     stalls: List[Dict[str, Any]] = field(default_factory=list)
+    # observability (repro.obs, traced runs only): the critical-path
+    # attribution report (``obs.critical.attribute`` over this run's spans),
+    # the flight-recorder failure dumps (most recent spans at each failure),
+    # and where/how-much the Perfetto export wrote
+    critical_path: Dict[str, Any] = field(default_factory=dict)
+    flight_recorder: List[Dict[str, Any]] = field(default_factory=list)
+    trace_path: Optional[str] = None
+    trace_spans: int = 0
 
     @property
     def total_bytes_moved(self) -> int:
@@ -189,6 +200,16 @@ class WorkflowReport:
                 f"-> {s['action']}")
         for edge, msg in self.prefetch_errors:
             lines.append(f"  PREFETCH-ERROR edge={edge}: {msg}")
+        if self.trace_spans:
+            lines.append(
+                f"trace: spans={self.trace_spans}"
+                + (f" -> {self.trace_path}" if self.trace_path else ""))
+        for d in self.flight_recorder:
+            lines.append(
+                f"  FLIGHT-DUMP {d['task']}[{d['instance']}] "
+                f"({len(d['spans'])} recent spans): {d['reason']}")
+        if self.critical_path.get("instances"):
+            lines.append(format_report(self.critical_path))
         return "\n".join(lines)
 
 
@@ -276,6 +297,7 @@ class Wilkins:
         self._run_supervisor: Optional[RunSupervisor] = None
         self._run_report: Optional[WorkflowReport] = None
         self._run_pool: Optional[PrefetchPool] = None
+        self._run_tracer: Optional[SpanRecorder] = None
         self._ck_root = ""
         self._extra_threads: List[threading.Thread] = []
         self._extra_lock = make_lock("leaf:driver_extra")
@@ -401,6 +423,7 @@ class Wilkins:
             redist_specs=specs,
             scheduler=self._sched_runtime,
             supervisor=self._run_supervisor,
+            tracer=self._run_tracer,
         )
 
     def _run_instance(self, name: str, inst: int, report: WorkflowReport,
@@ -542,6 +565,16 @@ class Wilkins:
                                 attempt=attempt,
                                 reason=f"{type(e).__name__}: {e}")
                         return
+                    tr = sup.tracer
+                    if tr is not None:
+                        why = ("restarts exhausted"
+                               if policy.kind in ("restart", "rescale")
+                               and policy.max_retries > 0 else "task failure")
+                        tr.mark_failure(
+                            f"{why}: {type(e).__name__}: {e}", name, inst)
+                        # the runner's generic dump would re-snapshot the
+                        # same history -- mark this error as already dumped
+                        e._flight_dumped = True  # type: ignore[attr-defined]
                     raise  # fail (or retries exhausted): chain per PR 3
                 op = sup.mark_done_or_join(name, inst)
                 if op is not None:
@@ -627,7 +660,8 @@ class Wilkins:
                                        nslots=nslots, nprocs=nprocs)
 
     def run(self, timeout: Optional[float] = None,
-            faults: Optional[Any] = None) -> WorkflowReport:
+            faults: Optional[Any] = None,
+            trace: Optional[Any] = None) -> WorkflowReport:
         """Run the workflow to completion.
 
         ``faults`` threads a deterministic fault-injection plan through the
@@ -635,10 +669,21 @@ class Wilkins:
         spelling), or a list of either.  Injected crashes take the same
         failure paths real errors do -- policies, quarantine, poison pills
         and all -- which is what makes every recovery path testable without
-        flaky sleeps."""
+        flaky sleeps.
+
+        ``trace`` opts this run into span tracing (``True`` for defaults, a
+        path string to auto-export a Perfetto ``trace.json`` there, a dict
+        in the YAML ``tracing:`` spelling, or a ``TraceConfig``); it wins
+        over the workflow's ``tracing:`` block.  Both absent is the
+        zero-cost default: no recorder is allocated and every hook site
+        stays one attribute load + None test."""
         report = WorkflowReport(channels=self.channels)
         threads: List[threading.Thread] = []
         errors: List[BaseException] = []
+        tcfg = TraceConfig.coerce(trace) or self.graph.tracing
+        tracer: Optional[SpanRecorder] = (
+            SpanRecorder(tcfg) if tcfg is not None else None)
+        self._run_tracer = tracer
 
         # The run's supervisor: lifecycle states, epochs, fault firing, and
         # the channel surgery for restart / drop / rescale / permanent
@@ -658,6 +703,7 @@ class Wilkins:
                            for name, t in self.graph.tasks.items()}
         sup.on_rescale = self._execute_rescale
         sup.validate_rescale = self._validate_rescale_request
+        sup.tracer = tracer
         self._run_supervisor = sup
         self._run_report = report
         self._extra_threads = []
@@ -670,6 +716,10 @@ class Wilkins:
                 if sup.is_superseded(name, gen):
                     return  # a rescale retired this incarnation mid-failure
                 errors.append(e)
+                if tracer is not None and not getattr(
+                        e, "_flight_dumped", False):
+                    tracer.mark_failure(
+                        f"task failure: {type(e).__name__}: {e}", name, inst)
                 # poison our outgoing channels FIRST: consumers blocked in
                 # get() raise a ChannelError naming us instead of waiting
                 # out their timeout (finalize()'s producer-done races this,
@@ -718,6 +768,15 @@ class Wilkins:
                 ch.autotune is not None for ch in self.channels):
             for vol in self.vols.values():
                 vol.scheduler = sched
+        # Tracing wiring (traced runs only): the VOLs, the channels and the
+        # supervisor all hold the one run-scoped recorder; TaskComms pick it
+        # up per incarnation via ``_make_comm``, rescale surgery re-wires
+        # the rebuilt channels/VOLs from ``sup.tracer``.
+        if tracer is not None:
+            for vol in self.vols.values():
+                vol.tracer = tracer
+            for ch in self.channels:
+                ch.set_tracer(tracer)
         # Recovery wiring, gated on actually being able to recover (managed
         # restart/drop policies or an injected fault plan): VOLs get the
         # supervisor (fault points + epoch stamping), channels get the fault
@@ -783,6 +842,10 @@ class Wilkins:
                         report.stalls.append(sev.as_dict())
                         sched.notify_stall(task, i, silent, wd_timeout,
                                            action)
+                        if tracer is not None:
+                            tracer.mark_failure(
+                                f"stall declared: silent {silent:.2f}s > "
+                                f"{wd_timeout}s -> {action}", task, i)
                         try:
                             if pol.kind == "rescale":
                                 # resize away from the stalled instance; the
@@ -865,6 +928,8 @@ class Wilkins:
             # every secondary task error stays reachable via the __context__
             # chain -- raising only errors[0] used to silently discard the rest.
             if hung:
+                if tracer is not None:
+                    tracer.mark_failure(f"join timeout: {hung}")
                 err: BaseException = TimeoutError(
                     f"task threads did not finish before the deadline: {hung}")
                 err = _chain_errors(err, errors)
@@ -888,9 +953,18 @@ class Wilkins:
                 report.scheduler = sched.snapshot()
                 report.scheduler["recovery"] = sup.snapshot()
                 report.timeline = sched.timeline
+            # An exception between the joins and the success-path snapshot
+            # block (shutdown races, KeyboardInterrupt) would leave the
+            # report attached to the chained error without its transport /
+            # plan-cache counters -- re-snapshot here, under the stats'
+            # own locks, exactly like the scheduler above.
+            if not report.transport:
+                report.transport = transport_stats().snapshot()
+                report.plan_cache = plan_cache().snapshot()
             for vol in self.vols.values():
                 vol.scheduler = None
                 vol.supervisor = None
+                vol.tracer = None
             self._sched_runtime = None
             if pool is not None:
                 pool.shutdown()
@@ -906,6 +980,23 @@ class Wilkins:
                     ch.set_prep_retry(False)
                     ch.set_replay(False)
                     ch.set_retention(False)
+            if tracer is not None:
+                # Finalize the trace on success and error paths alike: the
+                # returned report (or ``err.report`` -- same object) carries
+                # the span count, flight dumps, attribution and export path;
+                # mutating it here is visible to the caller even after the
+                # ``return report`` above.
+                for ch in self.channels:
+                    ch.set_tracer(None)
+                sup.tracer = None
+                spans = tracer.spans()
+                report.trace_spans = len(spans)
+                report.flight_recorder = tracer.dumps()
+                report.critical_path = attribute(spans)
+                if tracer.config.path:
+                    report.trace_path = export_trace(
+                        tracer.config.path, tracer, timeline=sched.timeline)
+            self._run_tracer = None
             self._run_supervisor = None
             self._run_report = None
             self._run_pool = None

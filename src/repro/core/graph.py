@@ -28,6 +28,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import yaml
 
 from ..analysis import rules
+from ..obs.recorder import TraceConfig
 from .datamodel import match_file, match_path
 from .recovery import FailurePolicy
 from .scheduler import SchedulerConfig
@@ -171,10 +172,12 @@ class WorkflowGraph:
     """Tasks + matched edges; the driver instantiates channels from this."""
 
     def __init__(self, tasks: List[TaskSpec],
-                 scheduler: Optional[SchedulerConfig] = None):
+                 scheduler: Optional[SchedulerConfig] = None,
+                 tracing: Optional[TraceConfig] = None):
         rules.check_duplicate_names([t.func for t in tasks])
         self.tasks: Dict[str, TaskSpec] = {t.func: t for t in tasks}
         self.scheduler = scheduler if scheduler is not None else SchedulerConfig()
+        self.tracing = tracing  # None = the zero-cost default (no tracer)
         self.edges: List[Edge] = self._match()
         self._validate_rescale()
 
@@ -191,7 +194,8 @@ class WorkflowGraph:
             doc = source
         rules.check_workflow_doc(doc)
         return cls([_parse_task(t) for t in doc["tasks"]],
-                   scheduler=SchedulerConfig.from_yaml(doc.get("scheduler")))
+                   scheduler=SchedulerConfig.from_yaml(doc.get("scheduler")),
+                   tracing=TraceConfig.from_yaml(doc.get("tracing")))
 
     # ------------------------------------------------------------ matching
     def _match(self) -> List[Edge]:

@@ -714,6 +714,8 @@ class RunSupervisor:
         # driver-installed callbacks: surgery executor + rescale validator
         self.on_rescale: Optional[Callable[[RescaleOp], None]] = None
         self.validate_rescale: Optional[Callable[..., None]] = None
+        # per-run SpanRecorder (driver-attached on traced runs)
+        self.tracer: Optional[Any] = None
 
     # ------------------------------------------------------------- queries
     def policy_for(self, task: str) -> FailurePolicy:
@@ -773,6 +775,7 @@ class RunSupervisor:
         payloads for replay and rewind the dedup watermark.  Producers
         blocked in ``offer()`` are woken by the queue surgery and
         re-rendezvous against the new epoch."""
+        t0 = time.monotonic()
         with self._lock:
             key = (task, instance)
             self._attempt[key] = self._attempt.get(key, 0) + 1
@@ -790,7 +793,12 @@ class RunSupervisor:
             ch.quarantine_consumer(epoch)
         if vol is not None:
             vol.reset_for_restart()
-        ev = RestartEvent(time.monotonic(), task, instance, attempt, epoch,
+        now = time.monotonic()
+        if self.tracer is not None:
+            self.tracer.record("recovery", "recovery.restart", task, instance,
+                               t0, now, attempt=attempt, epoch=epoch,
+                               error=type(error).__name__)
+        ev = RestartEvent(now, task, instance, attempt, epoch,
                           f"{type(error).__name__}: {error}")
         with self._lock:
             self.restarts.append(ev)
@@ -803,6 +811,8 @@ class RunSupervisor:
             ch.finish()          # consumers see producer-done, exit cleanly
         for ch in incoming:
             ch.abandon_consumer()  # producers' offers become counted drops
+        if self.tracer is not None:
+            self.tracer.instant("recovery", "task.drop", task, instance)
         with self._lock:
             self._state[(task, instance)] = TaskState.DROPPED
             self.dropped.append((task, instance))
@@ -878,6 +888,9 @@ class RunSupervisor:
         return out
 
     def record_stall(self, ev: StallEvent) -> None:
+        if self.tracer is not None:
+            self.tracer.instant("recovery", "stall.declared", ev.task,
+                                ev.instance, silent_s=ev.silent_s)
         with self._lock:
             self.stalls.append(ev)
 

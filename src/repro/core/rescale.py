@@ -277,9 +277,21 @@ def execute_rescale(driver: Any, op: RescaleOp) -> None:
 
 
 def _execute(driver: Any, sup: Any, op: RescaleOp) -> None:
+    import time as _time
+
     task, M, N = op.task, op.old_nslots, op.new_nslots
     t = driver.graph.tasks[task]
     gen_next = sup.generation(task) + 1
+    tr = sup.tracer  # surgery stages report as rescale spans when traced
+
+    def _stage(name: str, t0: float) -> float:
+        now = _time.monotonic()
+        if tr is not None:
+            tr.record("rescale", f"rescale.{name}", task, -1, t0, now,
+                      old=M, new=N)
+        return now
+
+    t_stage = _time.monotonic()
 
     old_chs = [ch for ch in driver.channels if ch.consumer[0] == task]
     old_by_edge: Dict[str, List[Channel]] = {}
@@ -308,6 +320,7 @@ def _execute(driver: Any, sup: Any, op: RescaleOp) -> None:
             lk = driver.vols[p].serve_lock
             lk.acquire()
             held.append(lk)
+        t_stage = _stage("grace", t_stage)
 
         # 2. snapshot counters + every re-cuttable step; siblings of one
         # edge are fan-out copies of the same serves, so their producer
@@ -329,9 +342,11 @@ def _execute(driver: Any, sup: Any, op: RescaleOp) -> None:
                   for ch, s in zip(old_by_edge[key], snaps[key])]
             for key in old_by_edge
         }
+        t_stage = _stage("snapshot", t_stage)
 
         # 3. consistent cut + checkpoint re-cut (M shards -> N shards)
         cut_step, floors, new_dirs = _recut_checkpoints(driver, op, gen_next)
+        t_stage = _stage("recut", t_stage)
 
         # 4. rebuild: N fresh channels per inbound edge, counters adopted
         # verbatim, replay steps re-partitioned through each new channel's
@@ -396,6 +411,7 @@ def _execute(driver: Any, sup: Any, op: RescaleOp) -> None:
                     delivered_floor=floor,
                 )
                 ch.set_supervisor(sup)
+                ch.set_tracer(tr)
                 ch.set_prep_retry(True)
                 ch.set_replay(True)
                 ch.set_retention(True)
@@ -407,6 +423,7 @@ def _execute(driver: Any, sup: Any, op: RescaleOp) -> None:
                     ch.rescale_preload(sub, seq)
                 new_chs.append(ch)
                 new_by_inst[j].append(ch)
+        t_stage = _stage("rebuild", t_stage)
 
         # 5. swap, everywhere, while the producers are still locked out
         dead = {id(c) for c in old_chs}
@@ -439,6 +456,7 @@ def _execute(driver: Any, sup: Any, op: RescaleOp) -> None:
                     vol.set_file(ch.filename_pattern)
             vol.scheduler = sched_wired
             vol.supervisor = sup
+            vol.tracer = tr
             driver.vols[(task, j)] = vol
             driver._recovery_ctx[(task, j)] = RecoveryContext(
                 task, j, new_dirs[j], incoming=new_by_inst[j], outgoing=[])
@@ -454,6 +472,7 @@ def _execute(driver: Any, sup: Any, op: RescaleOp) -> None:
             sched.channels = [c for c in sched.channels
                               if id(c) not in dead] + new_chs
         sup.replace_channels(old_chs, new_chs)
+        t_stage = _stage("swap", t_stage)
     finally:
         for lk in held:
             lk.release()

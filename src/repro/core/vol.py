@@ -28,7 +28,9 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..analysis.lockcheck import make_lock, sched_point
-from .channel import NO_DATA, Channel, ChannelMux
+from ..obs.recorder import flow_id
+from .channel import (NO_DATA, Channel, ChannelMux, enter_mux_wait_scope,
+                      exit_mux_wait_scope)
 from .datamodel import BlockOwnership, File, compile_file_pattern
 
 __all__ = ["VOL", "current_vol", "push_vol", "pop_vol"]
@@ -91,6 +93,8 @@ class VOL:
         # through it, and served files are stamped with the incarnation's
         # epoch (``wilkins_epoch`` attr) at close
         self.supervisor = None
+        # per-run span recorder (driver-attached; None = untraced run)
+        self.tracer = None
 
         self.file_close_counter = 0
         self.file_open_counter = 0
@@ -220,6 +224,7 @@ class VOL:
         self._open_files[f.filename] = f
 
     def on_file_close(self, f: File) -> None:
+        t0 = time.monotonic()
         sup = self.supervisor  # local: the driver may detach it concurrently
         if sup is not None:
             # every step boundary is a health signal for the stall watchdog
@@ -242,6 +247,14 @@ class VOL:
             # exactly LowFive's serve-on-close convention.
             self.serve_all(True, True)
             self.clear_files()
+        tr = self.tracer  # local: the driver may detach it concurrently
+        if tr is not None:
+            # lifecycle span, not a wait: the rendezvous-blocked portion is
+            # claimed by the nested channel.offer spans, the rest is serve
+            # work (filter/slab/spill) on the producer's own clock
+            tr.record("vol", "vol.close", self.task, self.instance, t0,
+                      time.monotonic(), step=self.file_close_counter - 1,
+                      filename=f.filename)
         sched = self.scheduler  # local: the driver may detach it concurrently
         if sched is not None:
             sched.notify_step("file_close")
@@ -272,10 +285,18 @@ class VOL:
             # advertise the blocked consumer so `latest` producers serve us
             c.set_consumer_waiting(True)
         t0 = time.monotonic()
+        # nested-wait guard: this loop accounts the whole multiplexed wait
+        # itself, so a get() issued on one of these channels from inside the
+        # scope must not add the same wall time to consumer_wait_s again
+        scope = enter_mux_wait_scope(chans)
         try:
             while True:
                 token = mux.token()
                 any_live = False
+                # the wait ends when data is FOUND; delivery work after the
+                # take (future result on a prefetch miss, spill load) is
+                # accounted by prefetch_blocked_s, never re-counted as wait
+                t_scan = time.monotonic()
                 for c in chans:
                     r = c.try_get()
                     if r is NO_DATA:
@@ -286,9 +307,18 @@ class VOL:
                         # read-modify-write -- a concurrent get() on a
                         # sibling consumer could otherwise lose the update
                         with c._lock:
-                            c.stats.consumer_wait_s += time.monotonic() - t0
+                            c.stats.consumer_wait_s += t_scan - t0
+                        # wait accounted: callbacks below may block anew
+                        exit_mux_wait_scope(scope)
                         step = self.file_open_counter
                         self.file_open_counter += 1
+                        tr = self.tracer  # local: driver may detach it
+                        if tr is not None:
+                            tr.record("vol", "vol.open.wait", self.task,
+                                      self.instance, t0, t_scan, step=step,
+                                      flow=("f", flow_id(c.name,
+                                                         c.delivered_seq)),
+                                      edge=c.name)
                         if sup is not None:
                             # fault point "recv": the payload WAS delivered
                             # (the channel's watermark moved, the replay
@@ -310,6 +340,7 @@ class VOL:
                 else:
                     mux.wait(token)
         finally:
+            exit_mux_wait_scope(scope)  # idempotent on the delivery path
             for c in chans:
                 c.set_consumer_waiting(False)
                 c.remove_listener(mux)
